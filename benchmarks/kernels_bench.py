@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: name,us_per_call,derived CSV (CPU wall-clock of
+the jnp dispatch path; the Pallas path is TPU-target and validated in
+interpret mode by tests)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, S, H, KH, Dh = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, Dh)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True,
+                                                    impl="jnp"))
+    us = _bench(f, q, k, v)
+    fl = 2 * B * H * S * S * Dh * 2 / 2
+    rows.append(("flash_attention_512", us, f"{fl/us/1e3:.2f}GFLOPs"))
+
+    b, s, h, p, g, n = 1, 1024, 8, 64, 1, 64
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(b, s, h)), jnp.float32)
+    A = -jnp.ones((h,), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    f = jax.jit(lambda *a: ops.ssd(*a, chunk=64, impl="jnp"))
+    us = _bench(f, x, dt, A, Bm, Cm)
+    rows.append(("ssd_chunked_1k", us, f"chunk=64"))
+
+    xc = jnp.asarray(rng.normal(size=(8, 1 << 20)), jnp.float32)
+    th = jnp.full((8,), 0.1, jnp.float32)
+    f = jax.jit(lambda x, t: ops.topk_compress(x, t, block=1024, impl="jnp"))
+    us = _bench(f, xc, th)
+    gbps = xc.size * 4 / (us / 1e6) / 1e9
+    rows.append(("topk_compress_8x1M", us, f"{gbps:.2f}GB/s"))
+
+    la = -jnp.asarray(rng.uniform(0.01, 1, size=(2, 2048, 256)), jnp.float32)
+    gx = jnp.asarray(rng.normal(size=(2, 2048, 256)), jnp.float32)
+    f = jax.jit(lambda a, g: ops.rglru(a, g)[0])
+    us = _bench(f, la, gx)
+    rows.append(("rglru_assoc_2k", us, "assoc-scan"))
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

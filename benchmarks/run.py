@@ -1,0 +1,50 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV blocks:
+  1. kernel microbenchmarks;
+  2. the paper-reproduction suite (Fig. 2/3 + Table 2; quick mode);
+  3. roofline summary from the dry-run artifacts (if present).
+
+``--full`` additionally runs the Fig. 4/5/6/7 sweeps.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    t0 = time.time()
+
+    print("== kernel microbenchmarks ==")
+    from benchmarks import kernels_bench
+    kernels_bench.main()
+
+    print("\n== paper reproduction: Fig. 2/3 + Table 2 ==")
+    from benchmarks import fig2_3_convergence
+    fig2_3_convergence.main(rounds=40 if not full else 60)
+
+    if full:
+        print("\n== Fig. 4 (non-IID) ==")
+        from benchmarks import fig4_noniid
+        fig4_noniid.main(rounds=40)
+        print("\n== Fig. 5 (topology) ==")
+        from benchmarks import fig5_topology
+        fig5_topology.main(rounds=40)
+        print("\n== Fig. 6/7 (q, tau) ==")
+        from benchmarks import fig67_periods
+        fig67_periods.main(rounds=40)
+
+    print("\n== roofline (from dry-run artifacts) ==")
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:  # dry-run artifacts may be absent
+        print(f"roofline skipped: {e}")
+
+    print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

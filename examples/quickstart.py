@@ -1,0 +1,78 @@
+"""Quickstart: HCEF federated training of a small LM in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Four FL devices in two clusters cooperatively train a reduced smollm on a
+synthetic corpus; per-device (rho, theta) controls come from the HCEF
+controller under time/energy budgets.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.controller import BudgetState
+from repro.core.round import init_state, make_round_step
+from repro.data.synthetic import synthetic_tokens
+from repro.fl.baselines import make_controller
+from repro.fl.heterogeneity import HeterogeneityModel
+
+
+def main():
+    cfg = smoke_model(get_config("smollm_135m").model)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=4, q=2, eta=0.1, momentum=0.9)
+    R = topo.num_devices
+
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    step_gossip = jax.jit(make_round_step(cfg, hcef, topo, gossip=True))
+    step_intra = jax.jit(make_round_step(cfg, hcef, topo, gossip=False))
+
+    corpus = synthetic_tokens(cfg.vocab_size, n_seq=64, seq_len=33,
+                              n_devices=R, beta=0.5)
+    controller = make_controller("hcef", hcef.tau)
+    het = HeterogeneityModel(num_devices=R, model_bits=2.3e6 * 32)
+    budget = BudgetState(time_budget=3e4, energy_budget=4e3, phi=12,
+                         q=hcef.q, backhaul_time=het.backhaul_time())
+
+    rng = np.random.default_rng(0)
+    print("round  loss    rho(mean)  theta(mean)  sim_time  sim_energy")
+    for rnd in range(12):
+        reports = het.sample_round(rnd)
+        rho, theta = controller.controls(reports, budget)
+        idx = rng.integers(0, corpus.shape[1], (R, hcef.tau * 2))
+        batch = {"tokens": jnp.asarray(
+            np.concatenate([corpus[d, idx[d]] for d in range(R)]))}
+        keys = jax.random.split(jax.random.PRNGKey(100 + rnd), R)
+        fn = step_gossip if (rnd + 1) % hcef.q == 0 else step_intra
+        state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
+                      jnp.asarray(theta, jnp.float32), keys)
+        t = float(np.max(rho * hcef.tau * reports.mu + theta * reports.nu))
+        e = float(np.sum(rho * hcef.tau * reports.alpha
+                         + reports.p * theta * reports.nu))
+        budget.time_spent_this += t
+        budget.energy_spent_this += e
+        budget.r += 1
+        if (rnd + 1) % hcef.q == 0:
+            budget.time_spent_prev += budget.time_spent_this
+            budget.energy_spent_prev += budget.energy_spent_this
+            budget.time_spent_this = budget.energy_spent_this = 0.0
+            budget.r = 0
+            budget.l += 1
+        print(f"{rnd:5d}  {float(m['loss'].mean()):6.3f}  "
+              f"{np.mean(rho):9.2f}  {np.mean(theta):11.2f}  "
+              f"{budget.time_spent_prev + budget.time_spent_this:8.0f}  "
+              f"{budget.energy_spent_prev + budget.energy_spent_this:10.0f}")
+    print("done — edge models reached consensus within clusters:",
+          bool(jnp.allclose(jax.tree.leaves(state.params)[0][0],
+                            jax.tree.leaves(state.params)[0][1])))
+
+
+if __name__ == "__main__":
+    main()

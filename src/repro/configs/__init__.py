@@ -1,0 +1,79 @@
+"""Config registry: one module per assigned architecture (+ paper's own)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ArchBundle, FLTopology, HCEFConfig, LM_SHAPES,
+                                ModelConfig, ShapeConfig,
+                                FULL_ATTN_LONG_SKIP)
+
+ARCH_IDS: List[str] = [
+    "mamba2_1p3b",
+    "internvl2_2b",
+    "qwen2_7b",
+    "phi3_medium_14b",
+    "smollm_135m",
+    "codeqwen1p5_7b",
+    "seamless_m4t_large_v2",
+    "arctic_480b",
+    "granite_moe_1b_a400m",
+    "recurrentgemma_9b",
+]
+
+# paper's own experimental models
+PAPER_IDS: List[str] = ["resnet20_cifar10", "femnist_cnn"]
+
+_ALIASES = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "internvl2-2b": "internvl2_2b",
+    "qwen2-7b": "qwen2_7b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "smollm-135m": "smollm_135m",
+    "codeqwen1.5-7b": "codeqwen1p5_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "arctic-480b": "arctic_480b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def get_config(name: str) -> ArchBundle:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchBundle]:
+    return {aid: get_config(aid) for aid in ARCH_IDS}
+
+
+def smoke_model(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=257,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat=False,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4,
+                  experts_per_token=min(cfg.experts_per_token, 2),
+                  d_ff=64, moe_dense_ff=64 if cfg.moe_dense_ff else 0)
+    if cfg.family == "ssm":
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_groups=1, ssm_chunk=16,
+                  num_heads=0, num_kv_heads=0, head_dim=0, d_ff=0)
+    if cfg.family == "hybrid":
+        kw.update(block_pattern=cfg.block_pattern, num_layers=3,
+                  window=16, lru_width=64, num_kv_heads=1)
+    if cfg.family == "encdec":
+        kw.update(enc_layers=2, num_kv_heads=4)
+    if cfg.frontend:
+        kw.update(frontend_tokens=8)
+    return cfg.replace(**kw)

@@ -1,0 +1,21 @@
+"""Paper's FEMNIST model: 2-conv CNN (6,603,710 params — asserted in tests)."""
+from repro.configs.base import ArchBundle, FLTopology, HCEFConfig, ModelConfig
+from repro.configs.resnet20_cifar10 import VisionConfig
+
+VISION = VisionConfig(name="femnist-cnn", kind="femnist_cnn", image_size=28,
+                      channels=1, num_classes=62)
+
+MODEL = ModelConfig(name="femnist-cnn", family="vision", num_layers=4,
+                    d_model=32, num_heads=0, num_kv_heads=0, head_dim=0,
+                    d_ff=1024, vocab_size=62, param_dtype="float32",
+                    compute_dtype="float32")
+
+CONFIG = ArchBundle(
+    model=MODEL,
+    fl_single=FLTopology(clusters=8, devices_per_cluster=8),
+    fl_multi=FLTopology(clusters=8, devices_per_cluster=8),
+    shapes=(),
+    hcef=HCEFConfig(tau=5, q=5, eta=0.03,
+                    time_budget=1.3e5, energy_budget=230e3),
+    source="paper sec 6.1",
+)

@@ -1,0 +1,35 @@
+"""Paper's CIFAR-10 model: ResNet-20 (269,722 params — asserted in tests)."""
+from dataclasses import dataclass
+
+from repro.configs.base import ArchBundle, FLTopology, HCEFConfig, ModelConfig
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    name: str
+    kind: str  # resnet20 | femnist_cnn
+    image_size: int
+    channels: int
+    num_classes: int
+    widths: tuple = (16, 32, 64)
+    blocks_per_stage: int = 3
+
+
+VISION = VisionConfig(name="resnet20-cifar10", kind="resnet20", image_size=32,
+                      channels=3, num_classes=10)
+
+# ModelConfig shim so generic tooling can report family/name.
+MODEL = ModelConfig(name="resnet20-cifar10", family="vision", num_layers=20,
+                    d_model=64, num_heads=0, num_kv_heads=0, head_dim=0,
+                    d_ff=0, vocab_size=10, param_dtype="float32",
+                    compute_dtype="float32")
+
+CONFIG = ArchBundle(
+    model=MODEL,
+    fl_single=FLTopology(clusters=8, devices_per_cluster=8),  # paper: 64 dev
+    fl_multi=FLTopology(clusters=8, devices_per_cluster=8),
+    shapes=(),
+    hcef=HCEFConfig(tau=5, q=5, eta=0.05,
+                    time_budget=8.5e4, energy_budget=15e3),
+    source="paper sec 6.1",
+)

@@ -1,0 +1,33 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal. [arXiv:2308.11596; hf]
+
+24L d_model=1024 16H (kv=16) d_ff=8192 vocab=256206.  Backbone only: the audio
+frontend is a STUB; input_specs() provides precomputed frame embeddings that
+feed the encoder.  Decoder uses causal self-attention + cross-attention.
+"""
+from repro.configs.base import (ArchBundle, FLTopology, FULL_ATTN_LONG_SKIP,
+                                ModelConfig)
+
+MODEL = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,  # decoder layers
+    enc_layers=24,
+    cross_attention=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,
+    frontend="audio_stub",
+    tie_embeddings=False,
+)
+
+CONFIG = ArchBundle(
+    model=MODEL,
+    fl_single=FLTopology(clusters=8, devices_per_cluster=2),
+    fl_multi=FLTopology(clusters=8, devices_per_cluster=4),
+    skip_shapes=("long_500k",),
+    skip_reason=FULL_ATTN_LONG_SKIP,
+    source="arXiv:2308.11596",
+)

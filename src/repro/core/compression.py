@@ -1,0 +1,107 @@
+"""The paper's compression operator Q applied to stacked-replica pytrees.
+
+Each leaf of the per-replica delta (R, *shape) is compressed with the
+block-local top-k kernel with fused error feedback.  Block-locality preserves
+the contraction property (Eq. 7) while keeping compression embarrassingly
+shardable.
+
+Sharding note (critical at 480B scale): flattening a sharded leaf to (R, L)
+is a sharding-destroying reshape — GSPMD would materialize the full leaf on
+every device.  When (mesh, specs) are provided, compression therefore runs
+inside a per-leaf ``shard_map``: every device compresses the blocks of its
+OWN shard (top-k is block-local anyway, so shard-locality changes nothing
+semantically — blocks never span shards).  Without a mesh (CPU tests) the
+plain path is used.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+
+
+def _compress_flat(flat, theta, block, impl):
+    """flat: (R_local, L_local) already local; theta: (R_local,).
+
+    (A slab-chunked lax.map variant was tried to bound the kernel's f32
+    working set but measured WORSE — the map double-buffers transposed
+    copies of the whole leaf; see EXPERIMENTS.md §Perf iteration log.)"""
+    L = flat.shape[1]
+    pad = (-L) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    masked, resid = ops.topk_compress(flat, theta, block=block, impl=impl)
+    return masked[:, :L], resid[:, :L]
+
+
+def _leaf_plain(d, e, theta, block, error_feedback, impl):
+    R = d.shape[0]
+    flat = d.astype(jnp.float32).reshape(R, -1)
+    if error_feedback and e is not None:
+        flat = flat + e.astype(jnp.float32).reshape(R, -1)
+    masked, resid = _compress_flat(flat, theta, block, impl)
+    return (masked.reshape(d.shape).astype(d.dtype),
+            resid.reshape(d.shape).astype(e.dtype if e is not None
+                                          else d.dtype))
+
+
+def compress_delta(delta, ef, theta, *, block: int = 1024,
+                   error_feedback: bool = True, impl=None,
+                   mesh=None, specs=None,
+                   replica_spec=None) -> Tuple[Any, Any]:
+    """delta, ef: pytrees of (R, *shape); theta: (R,) in (0, 1].
+
+    Returns (compressed_delta, new_ef) with
+      compressed + new_ef == delta + ef   (exact, tested).
+
+    mesh/specs: optional mesh and same-structure tree of PartitionSpec for
+    the leaves (including the leading R dim) -> shard_map per-shard path.
+    replica_spec: PartitionSpec for the (R,) theta vector.
+    """
+    if mesh is None or specs is None:
+        fn = functools.partial(_leaf_plain, theta=theta, block=block,
+                               error_feedback=error_feedback, impl=impl)
+        flat_d, treedef = jax.tree.flatten(delta)
+        flat_e = (treedef.flatten_up_to(ef) if ef is not None
+                  else [None] * len(flat_d))
+        out = [fn(d, e) for d, e in zip(flat_d, flat_e)]
+        return (treedef.unflatten([m for m, _ in out]),
+                treedef.unflatten([r for _, r in out]))
+
+    rspec = replica_spec if replica_spec is not None else P(None)
+
+    def per_leaf(d, e, spec):
+        def local(dl, el, tl):
+            Rl = dl.shape[0]
+            flat = dl.astype(jnp.float32).reshape(Rl, -1)
+            if error_feedback:
+                flat = flat + el.astype(jnp.float32).reshape(Rl, -1)
+            masked, resid = _compress_flat(flat, tl, block, impl)
+            return (masked.reshape(dl.shape).astype(dl.dtype),
+                    resid.reshape(dl.shape).astype(el.dtype))
+
+        fn = shard_map(local, mesh=mesh, in_specs=(spec, spec, rspec),
+                       out_specs=(spec, spec), check_vma=False)
+        return fn(d, e if e is not None else jnp.zeros_like(d), theta)
+
+    flat_d, treedef = jax.tree.flatten(delta)
+    flat_e = (treedef.flatten_up_to(ef) if ef is not None
+              else [None] * len(flat_d))
+    flat_s = treedef.flatten_up_to(specs)
+    out = [per_leaf(d, e, s) for d, e, s in zip(flat_d, flat_e, flat_s)]
+    return (treedef.unflatten([m for m, _ in out]),
+            treedef.unflatten([r for _, r in out]))
+
+
+def compression_ratio_bytes(theta: float, *, value_bits=16, index_bits=16,
+                            dense_bits=16) -> float:
+    """Wire-format bytes ratio of sparse (value, in-block index) encoding vs
+    dense: used by the cost model. Block-local indices fit in 10 bits; we
+    charge 16 for alignment."""
+    return theta * (value_bits + index_bits) / dense_bits

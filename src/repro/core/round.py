@@ -1,0 +1,239 @@
+"""HCEF round step (Algorithm 1, lines 4–19) as a single jit-able function.
+
+Stacked-replica layout: every FL device's state is one slice of a leading R
+dim sharded over the mesh's data axes; all FL algebra (intra-cluster
+averaging, inter-cluster gossip) is plain jnp on that dim, which GSPMD lowers
+to the corresponding collectives.
+
+One call = one edge round:
+  tau masked local SGD steps  ->  delta = x_tau - x_0
+  -> Q(delta + ef) block-top-k with error feedback (theta_n per device)
+  -> intra-cluster mean (devices -> edge model)
+  -> [every q-th round] gossip mix with H over clusters
+  -> broadcast edge models back to devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLTopology, HCEFConfig, ModelConfig
+from repro.core import mixing
+from repro.core.compression import compress_delta
+from repro.models.registry import get_model
+from repro.optim.sgd import sgd_init, sgd_update
+
+
+class FLState(NamedTuple):
+    params: Any     # pytree, leaves (R, *shape)
+    momentum: Any   # pytree or None
+    ef: Any         # error-feedback pytree, leaves (R, *shape)
+    round_idx: jnp.ndarray  # scalar int32
+
+
+def _global_norm2(tree):
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+               for x in jax.tree.leaves(tree))
+
+
+def init_state(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
+               rng) -> FLState:
+    model = get_model(cfg)
+    params = model.init(cfg, rng)
+    R = topo.num_devices
+    stack = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), t)
+    params_r = stack(params)
+    mom = None
+    if hcef.momentum and cfg.state_dtype:
+        mom = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.dtype(
+            cfg.state_dtype)), params_r)
+    ef = jax.tree.map(lambda x: jnp.zeros_like(x), params_r)
+    return FLState(params=params_r, momentum=mom, ef=ef,
+                   round_idx=jnp.zeros((), jnp.int32))
+
+
+def abstract_state(cfg: ModelConfig, hcef: HCEFConfig,
+                   topo: FLTopology) -> FLState:
+    """ShapeDtypeStruct version of init_state (no allocation) for lowering."""
+    return jax.eval_shape(lambda: init_state(cfg, hcef, topo,
+                                             jax.random.PRNGKey(0)))
+
+
+def _split_batch(batch: Dict[str, jnp.ndarray], R: int, tau: int):
+    """(global_batch, ...) -> (R, tau, b_local, ...)."""
+    def split(x):
+        B = x.shape[0]
+        assert B % (R * tau) == 0, (B, R, tau)
+        return x.reshape(R, tau, B // (R * tau), *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
+                    policy=None, *, gossip: bool = True, impl=None):
+    """Returns round_step(state, batch, rho, theta, keys) -> (state, metrics).
+
+    batch: dict of (global_batch, ...) arrays; rho/theta: (R,) controls;
+    keys: (R, 2) uint32 per-device PRNG keys.
+    ``gossip`` statically selects whether the inter-cluster mixing (Eq. 5)
+    runs at the end of the round (the driver uses it every q-th edge round).
+    """
+    model = get_model(cfg)
+    C, Dev = topo.clusters, topo.devices_per_cluster
+    R = topo.num_devices
+    H_np = mixing.make_mixing(topo.backhaul, C)
+    # Paper Appendix A: the whole aggregation (intra-cluster averaging +
+    # gossip + broadcast-back) is one linear operator W on the device dim:
+    #   W = B^T diag(c) H B    (gossip rounds)
+    #   W = B^T diag(c) B      (intra-only rounds)
+    # Using the (R, R) matrix directly (instead of reshape->(C, Dev)) keeps
+    # the replica dim's sharding intact under GSPMD — no replication of
+    # model-sharded leaves at 480B scale.
+    cluster_of = np.repeat(np.arange(C), Dev)
+    W_np = (H_np[np.ix_(cluster_of, cluster_of)] / Dev if gossip else
+            (cluster_of[:, None] == cluster_of[None, :]).astype(np.float64)
+            / Dev)
+    W = jnp.asarray(W_np, jnp.float32)
+
+    def device_round(params, mom, batch_tau, key, rho_r):
+        """One device's tau local iterations. All args UNSTACKED."""
+        x0 = params
+        bits = jax.random.bernoulli(
+            key, jnp.clip(rho_r, 0.0, 1.0), (hcef.tau,)).astype(jnp.float32)
+
+        def step(carry, inp):
+            p, m = carry
+            batch_s, bit = inp
+            loss, g = jax.value_and_grad(
+                lambda pp: model.loss_fn(cfg, pp, batch_s, policy))(p)
+            gn2 = _global_norm2(g)
+            g = jax.tree.map(lambda a: a * bit.astype(a.dtype), g)
+            p, m = sgd_update(p, g, m, lr=hcef.eta, momentum=hcef.momentum)
+            return (p, m), (loss, gn2, bit)
+
+        (params, mom), (losses, gn2s, bits_out) = jax.lax.scan(
+            step, (params, mom), (batch_tau, bits))
+        delta = jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32)
+                          - b.astype(jnp.float32)).astype(a.dtype),
+            params, x0)
+        # Algorithm-2 style statistics (norm-based proxies; DESIGN.md):
+        g2_est = jnp.min(gn2s)
+        sigma2_est = jnp.maximum(jnp.mean(gn2s) - g2_est, 0.0)
+        metrics = {"loss": jnp.mean(losses), "g2": g2_est,
+                   "sigma2": sigma2_est, "steps": jnp.sum(bits_out)}
+        return delta, mom, metrics
+
+    spmd = tuple(policy.replica_axes) if (
+        policy is not None and policy.replica_axes) else None
+
+    def round_step(state: FLState, batch, rho, theta, keys):
+        batch_r = _split_batch(batch, R, hcef.tau)
+        if R == 1:
+            # No vmap: a batched-by-1 tracer would have an extra leading dim
+            # and the policy's activation constraints (fixed ndim) would
+            # silently no-op — catastrophic at arctic-480b scale.
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            delta, mom, metrics = device_round(
+                sq(state.params), sq(state.momentum), sq(batch_r), keys[0],
+                rho[0])
+            delta = jax.tree.map(lambda x: x[None], delta)
+            mom = jax.tree.map(lambda x: x[None], mom)
+            metrics = jax.tree.map(lambda x: x[None], metrics)
+        else:
+            vkw = {"spmd_axis_name": spmd} if spmd else {}
+            delta, mom, metrics = jax.vmap(
+                device_round, in_axes=(0, 0, 0, 0, 0), **vkw)(
+                    state.params, state.momentum, batch_r, keys, rho)
+
+        # --- compression Q + aggregation (Sec. 3.2 / lines 16, 18) ---
+        mesh = policy.mesh if policy is not None else None
+        if mesh is not None:
+            # Fused per-leaf shard_map: each chip compresses the blocks of
+            # its own shard, then the W operator runs as shard-sized
+            # recursive-doubling + ring ppermutes (dist/collectives.py).
+            from jax import shard_map
+            from jax.sharding import PartitionSpec as PS
+            from repro.dist.collectives import mix_local
+            from repro.core.compression import _compress_flat
+
+            shd = policy.param_shardings(state.params, stacked=True)
+            specs = jax.tree.map(lambda s: s.spec, shd)
+            rspec = PS(tuple(policy.replica_axes) or None)
+            rep_axes = tuple(policy.replica_axes)
+            hkind = topo.backhaul if gossip else "none"
+
+            def per_leaf(x0l, dl, el, spec):
+                def local(x0s, ds, es, ts):
+                    # All math in the param dtype: f32 upcasts of whole model
+                    # shards would double peak HBM (kernel thresholds are
+                    # computed in f32 internally, per VMEM block).
+                    Rl = ds.shape[0]
+                    flat = ds.reshape(Rl, -1)
+                    if hcef.error_feedback:
+                        flat = flat + es.reshape(Rl, -1).astype(flat.dtype)
+                    masked, resid = _compress_flat(flat, ts,
+                                                   hcef.block_size, impl)
+                    upd = x0s + masked.reshape(ds.shape).astype(x0s.dtype)
+                    y = mix_local(upd, clusters=C, dev=Dev, axes=rep_axes,
+                                  hkind=hkind) if rep_axes else upd
+                    return (y.astype(x0s.dtype),
+                            resid.reshape(es.shape).astype(es.dtype))
+
+                fn = shard_map(local, mesh=mesh,
+                               in_specs=(spec, spec, spec, rspec),
+                               out_specs=(spec, spec), check_vma=False)
+                return fn(x0l, dl, el, theta)
+
+            flat_x, treedef = jax.tree.flatten(state.params)
+            flat_d = treedef.flatten_up_to(delta)
+            flat_e = treedef.flatten_up_to(state.ef)
+            flat_s = treedef.flatten_up_to(specs)
+            outs = [per_leaf(x, d, e, s) for x, d, e, s in
+                    zip(flat_x, flat_d, flat_e, flat_s)]
+            new_params = treedef.unflatten([p for p, _ in outs])
+            ef = treedef.unflatten([r for _, r in outs])
+        else:
+            comp, ef = compress_delta(delta, state.ef, theta,
+                                      block=hcef.block_size,
+                                      error_feedback=hcef.error_feedback,
+                                      impl=impl)
+
+            def aggregate(x0_leaf, comp_leaf):
+                upd = (x0_leaf.astype(jnp.float32)
+                       + comp_leaf.astype(jnp.float32))
+                if R > 1:
+                    upd = jnp.einsum("rs,s...->r...", W, upd)
+                return upd.astype(x0_leaf.dtype)
+
+            new_params = jax.tree.map(aggregate, state.params, comp)
+        new_state = FLState(params=new_params, momentum=mom, ef=ef,
+                            round_idx=state.round_idx + 1)
+        out_metrics = {k: v for k, v in metrics.items()}
+        return new_state, out_metrics
+
+    return round_step
+
+
+def make_serve_step(cfg: ModelConfig, policy=None):
+    """serve_step(params, cache, tokens) -> (logits, cache) for dry-run and
+    the serving engine (one decode token across the whole batch)."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(cfg, params, cache, tokens, policy)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy=None):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(cfg, params, batch, cache, policy)
+
+    return prefill_step

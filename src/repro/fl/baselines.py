@@ -1,0 +1,74 @@
+"""Round controllers: HCEF + the paper's benchmark schemes (Sec. 6.1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.controller import BudgetState, DeviceReports, solve_p2
+
+
+class Controller:
+    name = "base"
+
+    def __init__(self, tau: int, theta_min=0.05, rho_min=0.1):
+        self.tau = tau
+        self.theta_min = theta_min
+        self.rho_min = rho_min
+
+    def controls(self, reports: DeviceReports, budget: BudgetState):
+        raise NotImplementedError
+
+
+class HCEF(Controller):
+    """Joint adaptive rho & theta (Algorithm 3)."""
+    name = "hcef"
+
+    def controls(self, reports, budget):
+        return solve_p2(reports, budget, self.tau, self.theta_min,
+                        self.rho_min)
+
+
+class CEF(Controller):
+    """CE-FedAvg: heterogeneity-oblivious (rho = theta = 1)."""
+    name = "cef"
+
+    def controls(self, reports, budget):
+        N = len(reports.mu)
+        return np.ones(N), np.ones(N)
+
+
+class CEF_F(Controller):
+    """Adaptive local update frequency only (theta = 1)."""
+    name = "cef_f"
+
+    def controls(self, reports, budget):
+        return solve_p2(reports, budget, self.tau, self.theta_min,
+                        self.rho_min, fix_theta=1.0)
+
+
+class CEF_C(Controller):
+    """Adaptive compression only (rho = 1)."""
+    name = "cef_c"
+
+    def controls(self, reports, budget):
+        return solve_p2(reports, budget, self.tau, self.theta_min,
+                        self.rho_min, fix_rho=1.0)
+
+
+class MLL_SGD(Controller):
+    """rho_n proportional to device speed relative to the fastest device
+    (Castiglia et al.); theta = 1.  (The paper's prose normalizes by the sum,
+    which would send rho -> 1/N; we use the standard relative-to-fastest form
+    so the baseline is competitive, as in the original MLL-SGD.)"""
+    name = "mll_sgd"
+
+    def controls(self, reports, budget):
+        inv = 1.0 / np.maximum(reports.mu, 1e-12)
+        rho = inv / inv.max()
+        return np.clip(rho, self.rho_min, 1.0), np.ones(len(rho))
+
+
+CONTROLLERS = {c.name: c for c in (HCEF, CEF, CEF_F, CEF_C, MLL_SGD)}
+
+
+def make_controller(name: str, tau: int, **kw) -> Controller:
+    return CONTROLLERS[name](tau, **kw)

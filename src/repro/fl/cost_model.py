@@ -1,0 +1,24 @@
+"""Time (Eq. 8) and energy (Eq. 9) accounting for one edge round."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
+               gossip=False):
+    """Expected wall time of one edge round.
+
+    Per device: rho*tau*mu + theta*nu; per cluster: max over its devices;
+    round: max over clusters (+ backhaul when a gossip step follows)."""
+    per_dev = rho * tau * mu + theta * nu
+    m = int(cluster_of.max()) + 1
+    per_cluster = np.array([per_dev[cluster_of == i].max() for i in range(m)])
+    t = float(per_cluster.max())
+    if gossip:
+        t += backhaul
+    return t, per_cluster
+
+
+def round_energy(rho, theta, mu, nu, alpha, p, tau):
+    """Expected total energy of one edge round (sum over devices)."""
+    return float(np.sum(rho * tau * alpha + p * theta * nu))

@@ -1,0 +1,61 @@
+"""Device heterogeneity & dynamic-state models (paper Sec. 6.1).
+
+Two profiles:
+  * ``paper_edge`` — phone-class devices: CPU freq ~ U(1, 2) GHz resampled
+    every round (dynamic state), bandwidth ~ U(1, 5) Mbps, p ~ U(0.1, 1) W,
+    yielding mu in [75, 150] s and alpha in [1.5, 6] J as in the paper.
+  * ``tpu_pod`` — datacenter profile for the LM architectures: per-replica
+    step time with lognormal jitter (stragglers), inter-cluster links at
+    backbone bandwidth.  Same (mu, nu, alpha, p) interface: the controller
+    is agnostic to where the numbers come from.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.controller import DeviceReports
+
+
+@dataclass
+class HeterogeneityModel:
+    num_devices: int
+    profile: str = "paper_edge"
+    seed: int = 0
+    model_bits: float = 269_722 * 32  # full-model upload size (bits)
+    flops_per_iter: float = 123.9e6 * 50 * 3  # fwd+bwd, batch 50
+    base_step_time: float = 1.0  # tpu_pod: mean step seconds
+    backhaul_mbps: float = 50.0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # static part of heterogeneity: relative device capability
+        self.capability = rng.uniform(0.5, 1.0, self.num_devices)
+
+    def sample_round(self, round_idx: int) -> DeviceReports:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, round_idx]))
+        N = self.num_devices
+        if self.profile == "paper_edge":
+            freq = rng.uniform(1.0, 2.0, N)  # GHz, dynamic per round
+            mu = 150.0 / freq               # in [75, 150] s
+            alpha = 1.5 * freq ** 2          # in [1.5, 6] J
+            bw = rng.uniform(1.0, 5.0, N) * 1e6  # bit/s
+            nu = self.model_bits / bw
+            p = rng.uniform(0.1, 1.0, N)
+        elif self.profile == "tpu_pod":
+            jitter = rng.lognormal(0.0, 0.25, N)
+            mu = self.base_step_time * jitter / self.capability
+            alpha = 200.0 * mu  # ~200 W replica draw
+            bw = rng.uniform(0.5, 1.0, N) * 100e9  # 100 Gb/s class links
+            nu = self.model_bits / bw
+            p = np.full(N, 300.0)
+        else:
+            raise ValueError(self.profile)
+        # sigma2/G2 placeholders; overwritten by measured values in training
+        return DeviceReports(sigma2=np.ones(N), G2=np.ones(N), mu=mu,
+                             alpha=alpha, nu=nu, p=p)
+
+    def backhaul_time(self) -> float:
+        return self.model_bits / (self.backhaul_mbps * 1e6)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (blockwise, causal/windowed, GQA).
+
+TARGET: TPU v5e (MXU 128x128, VMEM-resident q/kv tiles).  Validated on CPU
+with interpret=True against ``ref.attention_ref``.
+
+Layout: q (B, H, Sq, Dh); k, v (B, KH, Skv, Dh); out (B, H, Sq, Dh).
+Grid (B, KH, nQ, nKV) with the KV dimension innermost; running (m, l, acc)
+accumulators live in VMEM scratch and the output tile is written on the last
+KV step.  Causal/window blocks that are fully masked are skipped with
+``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal, window, q_offset, scale, bq, bkv, nkv, sq, skv):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + iq * bq  # global position of first q row
+    k_start = ikv * bkv
+
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + bq - 1
+    if window:
+        live &= k_start + bkv - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale      # (G, bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bkv, Dh)
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # s: (G, bq, bkv)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask[None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)[..., None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_offset=0,
+                           softmax_scale=None, block_q=128, block_kv=128,
+                           interpret=False):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, KH, Dh) — same API as ref."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, KH, _ = k.shape
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    nq, nkv = Sq // bq, Skv // bkv
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, Sq, Dh)
+    kt = k.transpose(0, 2, 1, 3)  # (B, KH, Skv, Dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(
+        _kernel, causal=causal, window=window, q_offset=q_offset, scale=scale,
+        bq=bq, bkv=bkv, nkv=nkv, sq=Sq, skv=Skv)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, G, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, Dh), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, Dh), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, bq, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,87 @@
+"""jit'd dispatch wrappers: Pallas on TPU, blockwise-jnp elsewhere.
+
+Every op takes ``impl`` in {None, "pallas", "jnp", "ref"}; None = auto
+(pallas iff running on TPU).  ``interpret=True`` is used automatically when
+"pallas" is forced on a non-TPU backend (kernel correctness tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+from repro.kernels.topk_compress import topk_compress_pallas
+
+
+def _route(impl):
+    if impl in ("pallas", "jnp", "ref"):
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _interp():
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_len=None, softmax_scale=None, impl=None):
+    r = _route(impl)
+    if r == "pallas" and kv_len is None:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            softmax_scale=softmax_scale, interpret=_interp())
+    if r == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len,
+                                 softmax_scale=softmax_scale)
+    return ref.flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, kv_len=kv_len,
+                                   softmax_scale=softmax_scale)
+
+
+def decode_attention(q, k, v, *, kv_len=None, window=0, softmax_scale=None,
+                     impl=None, return_stats=False):
+    # Direct form on purpose: lowers to the flash-decode logsumexp-combine
+    # pattern when the KV cache is sequence-sharded (see DESIGN.md §3).
+    return ref.decode_attention_jnp(q, k, v, kv_len=kv_len, window=window,
+                                    softmax_scale=softmax_scale,
+                                    return_stats=return_stats)
+
+
+def decode_attention_combine(q, out_old, m_old, l_old, k_new, v_new, *,
+                             softmax_scale=None):
+    return ref.decode_attention_combine(q, out_old, m_old, l_old, k_new,
+                                        v_new, softmax_scale=softmax_scale)
+
+
+def ssd(x, dt, A, B, C, *, chunk=64, impl=None):
+    r = _route(impl)
+    if r == "pallas":
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk, interpret=_interp())
+    if r == "ref":
+        y, _ = ref.ssd_ref(x, dt, A, B, C)
+        return y
+    y, _ = ref.ssd_chunked_jnp(x, dt, A, B, C, chunk=chunk)
+    return y
+
+
+def topk_compress(x, theta, *, block=1024, impl=None):
+    """x: (R, L); theta: (R,).  Returns (masked, residual)."""
+    r = _route(impl)
+    if r == "pallas":
+        return topk_compress_pallas(x, theta, block=block,
+                                    interpret=_interp())
+    if r == "ref":
+        masked, _ = ref.topk_mask_exact(x, theta[:, None], block=block)
+        return masked, x - masked
+    masked, _ = ref.topk_mask_bisect_jnp(x, theta[:, None], block=block)
+    return masked, x - masked
+
+
+def rglru(log_a, gated_x, *, h0=None, impl=None):
+    r = _route(impl)
+    if r == "ref":
+        return ref.rglru_ref(log_a, gated_x, h0=h0)
+    return ref.rglru_scan_jnp(log_a, gated_x, h0=h0)

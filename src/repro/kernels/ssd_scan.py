@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (within-chunk dual form).
+
+TARGET: TPU v5e.  One grid cell = (batch b, head-block hb, chunk c); the
+running inter-chunk state (hb, P, N) is carried across the minor (chunk) grid
+dimension in VMEM scratch.  Within a chunk everything is matmul-form (MXU):
+
+  y_diag = C . (L o (B^T)) . (x*dt)      (attention-like, chunk-local)
+  y_off  = C . state_prev * decay_in
+  state  = chunk_decay * state_prev + (B * decay_out)^T . (x*dt)
+
+Inputs are pre-expanded to per-head B/C (groups resolved by the wrapper) and
+pre-chunked: x (B, NC, L, H, P), dt-premultiplied.  dA = dt * A: (B, NC, L, H).
+Validated with interpret=True against ``ref.ssd_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, dA_ref, B_ref, C_ref, y_ref, state_scr, *, L, hb, P, N,
+            nc):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)   # (L, hb, P)
+    dA = dA_ref[0, 0].astype(jnp.float32)     # (L, hb)
+    Bm = B_ref[0, 0].astype(jnp.float32)      # (L, hb, N)
+    Cm = C_ref[0, 0].astype(jnp.float32)      # (L, hb, N)
+
+    cs = jnp.cumsum(dA, axis=0)               # (L, hb)
+    # segsum decay matrix: decay[i, j, h] = exp(cs[i] - cs[j]) for i >= j
+    seg = cs[:, None, :] - cs[None, :, :]     # (L, L, hb)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tril = (ii >= jj)[:, :, None]
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)  # (L, L, hb)
+
+    # scores[i, j, h] = sum_n C[i,h,n] * B[j,h,n]
+    scores = jax.lax.dot_general(
+        Cm.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)    # (hb, L, L)
+    att = scores * decay.transpose(2, 0, 1)    # (hb, L, L)
+    y_diag = jax.lax.dot_general(
+        att, xdt.transpose(1, 0, 2), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)    # (hb, L, P)
+
+    state_prev = state_scr[...]                # (hb, P, N)
+    decay_in = jnp.exp(cs)                     # (L, hb)
+    y_off = jax.lax.dot_general(
+        Cm.transpose(1, 0, 2), state_prev, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)    # (hb, L, P)
+    y_off = y_off * decay_in.T[:, :, None]
+
+    y = (y_diag + y_off).transpose(1, 0, 2)    # (L, hb, P)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update
+    chunk_decay = jnp.exp(cs[-1])              # (hb,)
+    decay_out = jnp.exp(cs[-1][None, :] - cs)  # (L, hb)
+    Bd = Bm * decay_out[:, :, None]            # (L, hb, N)
+    new_part = jax.lax.dot_general(
+        xdt.transpose(1, 2, 0), Bd.transpose(1, 0, 2),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)    # (hb, P, N)
+    state_scr[...] = state_prev * chunk_decay[:, None, None] + new_part
+
+
+def ssd_pallas(x, dt, A, B, C, *, chunk=64, head_block=8, interpret=False):
+    """Same API as ref.ssd_ref: x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,g,n).
+
+    Returns y (b,s,h,p).  (Final state is not returned by the kernel path;
+    training/prefill uses y only — decode uses ``ref.ssd_decode_step``.)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:  # dt=0 on padded steps => no state/output contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                          head_block=head_block,
+                          interpret=interpret)[:, :s]
+    nc = s // chunk
+    hb = min(head_block, h)
+    assert h % hb == 0
+    nh = h // hb
+
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    xdt = (x * dt[..., None]).reshape(b, nc, chunk, h, p)
+    dA = (dt * A[None, None, :]).astype(f32).reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+
+    kern = functools.partial(_kernel, L=chunk, hb=hb, P=p, N=n, nc=nc)
+    y = pl.pallas_call(
+        kern,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, p), lambda ib, ih, c: (ib, c, 0, ih, 0)),
+            pl.BlockSpec((1, 1, chunk, hb), lambda ib, ih, c: (ib, c, 0, ih)),
+            pl.BlockSpec((1, 1, chunk, hb, n), lambda ib, ih, c: (ib, c, 0, ih, 0)),
+            pl.BlockSpec((1, 1, chunk, hb, n), lambda ib, ih, c: (ib, c, 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hb, p),
+                               lambda ib, ih, c: (ib, c, 0, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, chunk, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hb, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, dA, Bc, Cc)
+    return y.reshape(b, s, h, p)

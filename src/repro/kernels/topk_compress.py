@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the paper's compression operator Q (Sec. 3.2).
+
+Block-local top-k with fused error feedback:
+  input  x = delta + ef            (flat, reshaped to (R, nb, block))
+  output masked  = Q(x)            (kept coordinates, zeros elsewhere)
+  output residual = x - Q(x)       (new error-feedback buffer)
+
+The per-block threshold is found by fixed-iteration bisection on the
+magnitude (sort-free: TPU VPU-friendly, no O(block log block) sort).  Each
+grid cell processes a (rows, block) tile resident in VMEM; theta is per
+replica (leading R dim).  Keeps >=1 element per block so every block ships
+information.  Identical math to ``ref.topk_mask_bisect_jnp`` (the oracle).
+
+The contraction property (paper Eq. 7) holds per block and therefore
+globally: ||Q(x) - x||^2 <= (1 - theta) ||x||^2  (tested by property tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BISECT_ITERS = 16
+
+
+def _kernel(theta_ref, x_ref, masked_ref, resid_ref, *, block, rows):
+    x = x_ref[0].astype(jnp.float32)          # (rows, block)
+    theta = theta_ref[0, 0]
+    mag = jnp.abs(x)
+    k = jnp.clip(jnp.ceil(theta * block), 1.0, float(block))
+    lo = jnp.zeros((rows, 1), jnp.float32)
+    hi = mag.max(axis=-1, keepdims=True)
+
+    def body(i, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = (mag > mid).sum(axis=-1, keepdims=True).astype(jnp.float32)
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    # Threshold at the LOWER bisection bound: by loop invariant either
+    # count(mag > lo) > k, or lo == 0 (then everything not kept is exactly
+    # zero).  Using (lo+hi)/2 would drop threshold-TIES and can keep far
+    # fewer than k elements, violating the contraction property (Eq. 7) —
+    # found by hypothesis (tests/test_properties.py).
+    keep = mag > lo
+    # guarantee at least the max element of each block is kept
+    is_max = mag >= mag.max(axis=-1, keepdims=True)
+    none_kept = keep.sum(axis=-1, keepdims=True) == 0
+    keep = keep | (is_max & none_kept)
+    masked = jnp.where(keep, x, 0.0)
+    masked_ref[0] = masked.astype(masked_ref.dtype)
+    resid_ref[0] = (x - masked).astype(resid_ref.dtype)
+
+
+def topk_compress_pallas(x, theta, *, block=1024, rows=8, interpret=False):
+    """x: (R, L) with L % block == 0; theta: (R,) in (0, 1].
+
+    Returns (masked, residual), both (R, L) with masked + residual == x.
+    """
+    R, L = x.shape
+    assert L % block == 0, (L, block)
+    nb = L // block
+    rows = min(rows, nb)
+    assert nb % rows == 0, (nb, rows)
+    xb = x.reshape(R, nb, block)
+    theta2 = theta.reshape(R, 1).astype(jnp.float32)
+
+    kern = functools.partial(_kernel, block=block, rows=rows)
+    masked, resid = pl.pallas_call(
+        kern,
+        grid=(R, nb // rows),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, i: (r, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
+            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nb, block), x.dtype),
+            jax.ShapeDtypeStruct((R, nb, block), x.dtype),
+        ],
+        interpret=interpret,
+    )(theta2, xb)
+    return masked.reshape(R, L), resid.reshape(R, L)

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.round import (FLState, abstract_state, make_prefill_step,
+                              make_round_step, make_serve_step)
+from repro.dist.hlo_analysis import analyze_hlo
+from repro.dist.policies import Policy, make_serve_policy, make_train_policy
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models.registry import cache_specs, get_model, input_specs
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _cache_shardings(policy: Policy, cache_abs):
+    """Name-based sharding rules for decode caches (divisibility-guarded)."""
+    mesh = policy.mesh
+    nf = int(np.prod([mesh.shape[a] for a in policy.fsdp_axes], initial=1))
+    nb = int(np.prod([mesh.shape[a] for a in policy.batch_axes], initial=1))
+
+    def rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        b = tuple(policy.batch_axes)
+        f = tuple(policy.fsdp_axes)
+        s = tuple(policy.seq_axes)
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # (L, B, S, KH, Dh): batch + sequence sharding (flash-decode)
+            if b and shape[1] % nb == 0:
+                spec[1] = b
+            if shape[2] % nf == 0:
+                spec[2] = s
+        elif name == "conv" and len(shape) == 4:
+            if b and shape[1] % nb == 0:
+                spec[1] = b
+            if shape[3] % nf == 0:
+                spec[3] = f
+        elif name == "ssm" and len(shape) == 5:
+            if b and shape[1] % nb == 0:
+                spec[1] = b
+            if shape[2] % nf == 0:
+                spec[2] = f
+        elif name == "lru" and len(shape) == 3:
+            if b and shape[1] % nb == 0:
+                spec[1] = b
+            if shape[2] % nf == 0:
+                spec[2] = f
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abs)
+
+
+def _batch_shardings(policy: Policy, batch_abs):
+    mesh = policy.mesh
+    axes = tuple(policy.replica_axes) + tuple(policy.batch_axes)
+    n = int(np.prod([mesh.shape[a] for a in axes], initial=1))
+
+    def rule(leaf):
+        spec = [None] * leaf.ndim
+        if axes and leaf.shape[0] % n == 0:
+            spec[0] = axes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(rule, batch_abs)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True):
+    bundle = get_config(arch)
+    cfg = bundle.model
+    shapes = {s.name: s for s in bundle.shapes}
+    shape = shapes[shape_name]
+    if shape_name in bundle.skip_shapes:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": bundle.skip_reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dpx = dp_axes(mesh)
+    t0 = time.time()
+
+    # very large models need weights sharded beyond the model axis when
+    # serving (one 16-way shard per chip would blow HBM) — arctic-480b.
+    model0 = get_model(cfg)
+    pcount = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        jax.eval_shape(lambda: model0.init(cfg, jax.random.PRNGKey(0)))))
+    serve_extra = dpx if pcount * 2 / 16 > 12e9 else ()
+
+    if shape.kind == "train":
+        topo = bundle.fl_multi if multi_pod else bundle.fl_single
+        topo.validate(int(np.prod([mesh.shape[a] for a in dpx])))
+        policy = make_train_policy(mesh, topo, dp_axes=dpx)
+        step = make_round_step(cfg, bundle.hcef, topo, policy, gossip=True)
+        state_abs = abstract_state(cfg, bundle.hcef, topo)
+        state_sh = FLState(
+            params=policy.param_shardings(state_abs.params, stacked=True),
+            momentum=(policy.param_shardings(state_abs.momentum, stacked=True)
+                      if state_abs.momentum is not None else None),
+            ef=policy.param_shardings(state_abs.ef, stacked=True),
+            round_idx=policy.replicated())
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = _batch_shardings(policy, batch_abs)
+        R = topo.num_devices
+        rep = tuple(policy.replica_axes) or None
+        ctl_sh = NamedSharding(mesh, P(rep))
+        key_sh = NamedSharding(mesh, P(rep, None))
+        rho_abs = jax.ShapeDtypeStruct((R,), jnp.float32)
+        key_abs = jax.ShapeDtypeStruct((R, 2), jnp.uint32)
+        jitted = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh, ctl_sh, ctl_sh,
+                                       key_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        args = (state_abs, batch_abs, rho_abs, rho_abs, key_abs)
+    elif shape.kind == "prefill":
+        policy = make_serve_policy(mesh, dp_axes=dpx, kind="prefill",
+                                   extra_fsdp=serve_extra)
+        model = get_model(cfg)
+        params_abs = jax.eval_shape(
+            lambda: model.init(cfg, jax.random.PRNGKey(0)))
+        params_sh = policy.param_shardings(params_abs, stacked=False)
+        cache_abs = cache_specs(cfg, shape)
+        cache_sh = _cache_shardings(policy, cache_abs)
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = _batch_shardings(policy, batch_abs)
+        step = make_prefill_step(cfg, policy)
+        jitted = jax.jit(step, in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        args = (params_abs, batch_abs, cache_abs)
+    else:  # decode
+        policy = make_serve_policy(mesh, dp_axes=dpx, kind="decode",
+                                   extra_fsdp=serve_extra)
+        model = get_model(cfg)
+        params_abs = jax.eval_shape(
+            lambda: model.init(cfg, jax.random.PRNGKey(0)))
+        params_sh = policy.param_shardings(params_abs, stacked=False)
+        cache_abs = cache_specs(cfg, shape)
+        cache_sh = _cache_shardings(policy, cache_abs)
+        tok_abs = input_specs(cfg, shape)["tokens"]
+        tok_sh = _batch_shardings(policy, {"tokens": tok_abs})["tokens"]
+        step = make_serve_step(cfg, policy)
+        jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+        args = (params_abs, cache_abs, tok_abs)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    hstats = analyze_hlo(hlo)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "kind": shape.kind, "param_count": pcount,
+        "n_chips": n_chips,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_est_bytes": int(ma.argument_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        },
+        "cost_raw": {k: ca.get(k) for k in ("flops", "bytes accessed")
+                     if k in ca},
+        "hlo": {k: float(v) for k, v in hstats.items()},
+        "hlo_chars": len(hlo),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'} ==")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s; "
+              f"chips={n_chips}")
+        print(f"  memory/device: args={ma.argument_size_in_bytes/2**30:.2f}"
+              f"GiB temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB")
+        print(f"  hlo: flops={hstats['flops']:.3e} "
+              f"dot_bytes={hstats['dot_bytes']:.3e} "
+              f"coll_bytes={hstats['coll_total']:.3e}")
+        for k, v in sorted(hstats.items()):
+            if k.startswith("coll:"):
+                print(f"    {k} = {v:.3e}")
+    return result
+
+
+def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path) -> dict:
+    """Run one cell in an isolated subprocess (memory isolation) + cache."""
+    out = out_dir / f"{arch}.{shape}.{mesh_kind}.json"
+    if out.exists():
+        return json.loads(out.read_text())
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh_kind, "--out", str(out)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=3600)
+    if r.returncode != 0:
+        res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "error", "stderr": r.stderr[-4000:],
+               "wall_s": time.time() - t0}
+        out.write_text(json.dumps(res, indent=1))
+        return res
+    return json.loads(out.read_text())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        ok = err = skip = 0
+        for arch in ARCH_IDS:
+            bundle = get_config(arch)
+            for s in bundle.shapes:
+                for mesh_kind in ("single", "multi"):
+                    res = run_cell_subprocess(arch, s.name, mesh_kind,
+                                              RESULTS_DIR)
+                    tag = res["status"]
+                    ok += tag == "ok"
+                    err += tag == "error"
+                    skip += tag == "skipped"
+                    print(f"{arch:24s} {s.name:12s} {mesh_kind:6s} -> {tag}",
+                          flush=True)
+        print(f"TOTAL ok={ok} err={err} skipped={skip}")
+        sys.exit(1 if err else 0)
+
+    res = lower_cell(args.arch, args.shape, args.mesh == "multi")
+    if args.out:
+        Path(args.out).write_text(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

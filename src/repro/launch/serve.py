@@ -1,0 +1,73 @@
+"""Serving launcher: batched prefill+decode for any assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --smoke \
+        --batch 4 --new-tokens 16
+
+--mesh single/multi builds the production mesh + serve policy (TPU target;
+the AOT compile path of the same functions is exercised by launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_model
+from repro.dist.policies import make_serve_policy
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models.registry import get_model
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b", choices=ARCH_IDS)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    bundle = get_config(args.arch)
+    cfg = smoke_model(bundle.model) if args.smoke else bundle.model
+    model = get_model(cfg)
+
+    policy = None
+    if args.mesh != "host":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        policy = make_serve_policy(mesh, dp_axes=dp_axes(mesh))
+
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, max_len=args.prompt_len + args.new_tokens,
+                    batch_size=args.batch, policy=policy,
+                    serve=ServeConfig(max_new_tokens=args.new_tokens,
+                                      temperature=args.temperature))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extra = {}
+    if cfg.frontend == "vit_stub":
+        extra["patch_embeds"] = np.zeros(
+            (args.batch, cfg.frontend_tokens, cfg.d_model), np.float32)
+    if cfg.family == "encdec":
+        extra["frames"] = rng.normal(0, 1, (args.batch, args.prompt_len,
+                                            cfg.d_model)).astype(np.float32)
+    t0 = time.time()
+    out = engine.generate(prompts, extra_inputs=extra or None)
+    dt = time.time() - t0
+    n_tok = out.size
+    print(f"arch={args.arch} family={cfg.family} batch={args.batch}: "
+          f"generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s on this backend)")
+    for i, row in enumerate(out[:4]):
+        print(f"  req{i}: {row[:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

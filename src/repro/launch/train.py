@@ -1,0 +1,130 @@
+"""Federated training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+        --mesh host --smoke --rounds 8 --controller hcef
+
+--mesh host   : single-device (CPU) run, reduced config unless --full.
+--mesh single : 16x16 production mesh (on TPU hardware; on CPU this requires
+                xla_force_host_platform_device_count and is what
+                launch/dryrun.py exercises AOT).
+Ties together: mesh + policy + HCEF round steps + online controller +
+heterogeneity/budget accounting + checkpointing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_model
+from repro.core.controller import BudgetState
+from repro.core.round import init_state, make_round_step
+from repro.data.synthetic import synthetic_tokens
+from repro.dist.policies import make_train_policy
+from repro.fl.baselines import make_controller
+from repro.fl.cost_model import round_energy, round_time
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.runtime.checkpoint import save_pytree
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m", choices=ARCH_IDS)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--controller", default="hcef",
+                    choices=["hcef", "cef", "cef_f", "cef_c", "mll_sgd"])
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    bundle = get_config(args.arch)
+    cfg = smoke_model(bundle.model) if args.smoke else bundle.model
+    hcef = bundle.hcef
+
+    if args.mesh == "host":
+        mesh, policy = None, None
+        from repro.configs.base import FLTopology
+        topo = FLTopology(clusters=2, devices_per_cluster=2)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        topo = bundle.fl_multi if args.mesh == "multi" else bundle.fl_single
+        policy = make_train_policy(mesh, topo, dp_axes=dp_axes(mesh))
+
+    R = topo.num_devices
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    step_g = jax.jit(make_round_step(cfg, hcef, topo, policy, gossip=True))
+    step_i = jax.jit(make_round_step(cfg, hcef, topo, policy, gossip=False))
+
+    controller = make_controller(args.controller, hcef.tau)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state.params)) // R
+    het = HeterogeneityModel(num_devices=R, model_bits=n_params * 16)
+    budget = BudgetState(
+        time_budget=hcef.time_budget or np.inf,
+        energy_budget=hcef.energy_budget or np.inf,
+        phi=max(args.rounds // hcef.q, 1), q=hcef.q,
+        backhaul_time=het.backhaul_time())
+
+    corpus = synthetic_tokens(cfg.vocab_size, n_seq=32,
+                              seq_len=args.seq + 1, n_devices=R, beta=0.5)
+    rng = np.random.default_rng(0)
+    b_per_dev = hcef.tau * 2
+
+    print(f"arch={args.arch} mesh={args.mesh} R={R} controller="
+          f"{args.controller} params/replica={n_params:,}")
+    ctx = mesh or _null()
+    with ctx:
+        for rnd in range(args.rounds):
+            t0 = time.time()
+            reports = het.sample_round(rnd)
+            rho, theta = controller.controls(reports, budget)
+            idx = rng.integers(0, corpus.shape[1], (R, b_per_dev))
+            batch = {"tokens": jnp.asarray(np.concatenate(
+                [corpus[d, idx[d]] for d in range(R)]))}
+            keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
+            fn = step_g if (rnd + 1) % hcef.q == 0 else step_i
+            state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
+                          jnp.asarray(theta, jnp.float32), keys)
+            t, _ = round_time(rho, theta, reports.mu, reports.nu, hcef.tau,
+                              np.repeat(np.arange(topo.clusters),
+                                        topo.devices_per_cluster),
+                              gossip=(rnd + 1) % hcef.q == 0,
+                              backhaul=het.backhaul_time())
+            e = round_energy(rho, theta, reports.mu, reports.nu,
+                             reports.alpha, reports.p, hcef.tau)
+            budget.time_spent_this += t
+            budget.energy_spent_this += e
+            budget.r += 1
+            if (rnd + 1) % hcef.q == 0:
+                budget.time_spent_prev += budget.time_spent_this
+                budget.energy_spent_prev += budget.energy_spent_this
+                budget.time_spent_this = budget.energy_spent_this = 0.0
+                budget.r = 0
+                budget.l += 1
+            print(f"round {rnd:3d} loss={float(m['loss'].mean()):7.4f} "
+                  f"rho={np.mean(rho):.2f} theta={np.mean(theta):.2f} "
+                  f"sim_t={budget.time_spent_prev + budget.time_spent_this:9.0f}s "
+                  f"wall={time.time()-t0:5.1f}s")
+            if args.ckpt_dir:
+                save_pytree(Path(args.ckpt_dir) / f"ckpt_{rnd:06d}.npz",
+                            state._asdict(), meta={"round": rnd})
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Shared model components (pure functions, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16, "float64": jnp.float64}[name]
+
+
+def constrain(policy, x, kind: str):
+    """Apply the sharding policy's activation constraint (no-op if None)."""
+    if policy is None:
+        return x
+    return policy.act(x, kind)
+
+
+def rms_norm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding. x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    B, S, H, Dh = x.shape
+    half = Dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(rng, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token CE robust to vocab-sharded logits. logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = (labels[..., None] ==
+              jnp.arange(lf.shape[-1], dtype=labels.dtype)).astype(jnp.float32)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    ce = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(ce)
+
+
+def softcap(logits, cap):
+    if not cap:
+        return logits
+    lf = logits.astype(jnp.float32)
+    return (jnp.tanh(lf / cap) * cap).astype(logits.dtype)
+
+
+def mask_padded_logits(cfg, logits):
+    if cfg.vocab_padded == cfg.vocab_size:
+        return logits
+    pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+    return jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))

@@ -1,0 +1,51 @@
+"""Family -> model module resolution + unified input_specs()."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import griffin, lm, mamba2
+
+
+def get_model(cfg: ModelConfig):
+    """Returns the module implementing init/forward/loss_fn/prefill/decode."""
+    if cfg.family in ("dense", "moe", "encdec"):
+        return lm
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return griffin
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill: the token batch (+ stub frontend embeddings).
+    For decode: one new token per sequence (the KV cache is provided
+    separately via ``cache_specs``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    specs: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.frontend == "vit_stub":
+        specs["patch_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """ShapeDtypeStruct pytree matching init_cache for this decode cell."""
+    model = get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, S, enc_len=S
+                                 if cfg.family == "encdec" else 0))
+    return cache

@@ -1,0 +1,181 @@
+"""Paper's experimental models: ResNet-20 (CIFAR-10) and the LEAF FEMNIST CNN.
+
+Parameter counts are asserted in tests: ResNet-20 = 269,722; FEMNIST CNN =
+6,603,710 (5x5 convs 32/64 + fc2048 + fc62 — the configuration whose count
+matches the paper's stated 6,603,710; the paper's prose says 3x3/1024 but
+that count is 3.3M, so we follow the count, see tests/test_models.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+
+
+def he_init(rng, shape):
+    """He/Kaiming fan-in init (conv HWIO or fc (in, out))."""
+    import numpy as _np
+    fan_in = int(_np.prod(shape[:-1]))
+    return (jax.random.normal(rng, shape, jnp.float32)
+            * (2.0 / fan_in) ** 0.5)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, scale, bias, eps=1e-5):
+    """Batch-statistics normalization (no running stats; see DESIGN.md)."""
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# ResNet-20
+# ---------------------------------------------------------------------------
+
+def resnet20_init(rng, vision_cfg) -> Dict[str, Any]:
+    widths = vision_cfg.widths
+    bps = vision_cfg.blocks_per_stage
+    keys = iter(split_keys(rng, 128))
+    p: Dict[str, Any] = {
+        "conv0": he_init(next(keys), (3, 3, vision_cfg.channels, widths[0])),
+        "bn0_s": jnp.ones((widths[0],)), "bn0_b": jnp.zeros((widths[0],)),
+    }
+    c_in = widths[0]
+    for si, w_out in enumerate(widths):
+        for bi in range(bps):
+            pre = f"s{si}b{bi}_"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p[pre + "conv1"] = he_init(next(keys), (3, 3, c_in, w_out))
+            p[pre + "bn1_s"] = jnp.ones((w_out,))
+            p[pre + "bn1_b"] = jnp.zeros((w_out,))
+            p[pre + "conv2"] = he_init(next(keys), (3, 3, w_out, w_out))
+            p[pre + "bn2_s"] = jnp.ones((w_out,))
+            p[pre + "bn2_b"] = jnp.zeros((w_out,))
+            # option-A (parameter-free) shortcut at stage transitions, as in
+            # the original CIFAR ResNet-20 => exactly 269,722 parameters
+            c_in = w_out
+    p["fc_w"] = he_init(next(keys), (widths[-1], vision_cfg.num_classes))
+    p["fc_b"] = jnp.zeros((vision_cfg.num_classes,))
+    return p
+
+
+def resnet20_forward(params, images, vision_cfg):
+    x = _conv(images, params["conv0"])
+    x = jax.nn.relu(_bn(x, params["bn0_s"], params["bn0_b"]))
+    c_in = vision_cfg.widths[0]
+    for si, w_out in enumerate(vision_cfg.widths):
+        for bi in range(vision_cfg.blocks_per_stage):
+            pre = f"s{si}b{bi}_"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _conv(x, params[pre + "conv1"], stride)
+            h = jax.nn.relu(_bn(h, params[pre + "bn1_s"], params[pre + "bn1_b"]))
+            h = _conv(h, params[pre + "conv2"])
+            h = _bn(h, params[pre + "bn2_s"], params[pre + "bn2_b"])
+            sc = x
+            if stride != 1 or sc.shape[-1] != w_out:
+                sc = sc[:, ::stride, ::stride]  # option-A: subsample +
+                pad_c = w_out - sc.shape[-1]    # zero-pad channels
+                sc = jnp.pad(sc, ((0, 0), (0, 0), (0, 0),
+                                  (pad_c // 2, pad_c - pad_c // 2)))
+            x = jax.nn.relu(h + sc)
+            c_in = w_out
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST CNN (LEAF)
+# ---------------------------------------------------------------------------
+
+def femnist_cnn_init(rng, vision_cfg) -> Dict[str, Any]:
+    k = split_keys(rng, 4)
+    flat = (vision_cfg.image_size // 4) ** 2 * 64
+    return {
+        "conv1": he_init(k[0], (5, 5, vision_cfg.channels, 32)),
+        "b1": jnp.zeros((32,)),
+        "conv2": he_init(k[1], (5, 5, 32, 64)),
+        "b2": jnp.zeros((64,)),
+        "fc1_w": he_init(k[2], (flat, 2048)),
+        "fc1_b": jnp.zeros((2048,)),
+        "fc2_w": he_init(k[3], (2048, vision_cfg.num_classes)),
+        "fc2_b": jnp.zeros((vision_cfg.num_classes,)),
+    }
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def femnist_cnn_forward(params, images, vision_cfg):
+    x = jax.nn.relu(_conv(images, params["conv1"]) + params["b1"])
+    x = _pool2(x)
+    x = jax.nn.relu(_conv(x, params["conv2"]) + params["b2"])
+    x = _pool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+# ---------------------------------------------------------------------------
+# MLP — CPU-fast stand-in used by the benchmark sweeps (XLA CPU convolutions
+# run at ~1 GFLOP/s single-core; matmuls are ~50x faster).  The exact paper
+# models above are still tested/runnable (examples/paper_models_demo.py).
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, vision_cfg, hidden=(256, 128)):
+    dims = [vision_cfg.image_size ** 2 * vision_cfg.channels, *hidden,
+            vision_cfg.num_classes]
+    keys = split_keys(rng, len(dims))
+    p = {}
+    for i in range(len(dims) - 1):
+        p[f"w{i}"] = he_init(keys[i], (dims[i], dims[i + 1]))
+        p[f"b{i}"] = jnp.zeros((dims[i + 1],))
+    return p
+
+
+def mlp_forward(params, images, vision_cfg):
+    x = images.reshape(images.shape[0], -1)
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def make_vision_model(vision_cfg):
+    """Returns (init_fn(rng), loss_fn(params, batch), acc_fn(params, batch))."""
+    if vision_cfg.kind == "resnet20":
+        init_fn = lambda rng: resnet20_init(rng, vision_cfg)
+        fwd = lambda p, im: resnet20_forward(p, im, vision_cfg)
+    elif vision_cfg.kind == "femnist_cnn":
+        init_fn = lambda rng: femnist_cnn_init(rng, vision_cfg)
+        fwd = lambda p, im: femnist_cnn_forward(p, im, vision_cfg)
+    elif vision_cfg.kind == "mlp":
+        init_fn = lambda rng: mlp_init(rng, vision_cfg)
+        fwd = lambda p, im: mlp_forward(p, im, vision_cfg)
+    else:
+        raise ValueError(vision_cfg.kind)
+
+    def loss_fn(params, batch):
+        logits = fwd(params, batch["images"])
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    def acc_fn(params, batch):
+        logits = fwd(params, batch["images"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                        .astype(jnp.float32))
+
+    return init_fn, loss_fn, acc_fn, fwd

@@ -1,0 +1,52 @@
+"""Minimal pytree optimizers (no optax dependency)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum: float, state_dtype=jnp.float32):
+    if not momentum:
+        return None
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+
+
+def sgd_update(params, grads, mom_state, *, lr, momentum: float):
+    """SGD (+ heavy-ball momentum). Returns (new_params, new_mom)."""
+    if not momentum or mom_state is None:
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, mom_state
+    new_mom = jax.tree.map(
+        lambda m, g: momentum * m + g.astype(m.dtype), mom_state, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32)
+                      - lr * m.astype(jnp.float32)).astype(p.dtype),
+        params, new_mom)
+    return new_params, new_mom
+
+
+def adamw_init(params, state_dtype=jnp.float32):
+    z = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                     * jnp.square(g.astype(v.dtype)), state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        return (pf - step - lr * weight_decay * pf).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}

@@ -1,0 +1,78 @@
+"""Mesh-agnostic checkpointing: save logical arrays, reshard on restore.
+
+Checkpoints are plain ``.npz`` (pytree flattened by key path) + a JSON
+sidecar with step counters, controller/budget state and RNG.  Restore works
+onto any mesh/topology (arrays are logical/global), which is what enables
+elastic scaling (runtime/elastic.py) and restart-on-failure.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: Path, tree: Any, meta: Optional[Dict] = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for kp, leaf in flat:
+        arrays[_path_str(kp)] = np.asarray(jax.device_get(leaf))
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **arrays)
+    tmp.rename(path)  # atomic-ish: never leaves a torn checkpoint behind
+    if meta is not None:
+        path.with_suffix(".meta.json").write_text(json.dumps(meta, indent=1))
+
+
+def load_pytree(path: Path, template: Any,
+                shardings: Any = None) -> Tuple[Any, Optional[Dict]]:
+    """Restore into the structure of ``template`` (dtypes/shapes asserted).
+
+    If ``shardings`` (same-structure tree of NamedSharding) is given the
+    arrays are device_put with those shardings (resharding onto any mesh)."""
+    path = Path(path)
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for kp, leaf in flat:
+            key = _path_str(kp)
+            arr = data[key]
+            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                           leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    meta_path = path.with_suffix(".meta.json")
+    meta = json.loads(meta_path.read_text()) if meta_path.exists() else None
+    return tree, meta
+
+
+def latest_checkpoint(ckpt_dir: Path, prefix: str = "ckpt_"
+                      ) -> Optional[Path]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    cands = sorted(ckpt_dir.glob(f"{prefix}*.npz"))
+    return cands[-1] if cands else None

@@ -1,0 +1,62 @@
+"""Elastic scaling: re-partition FL state onto a different topology.
+
+Checkpoints store logical (R, *shape) arrays; scaling maps them to a new
+R' = clusters' * devices_per_cluster':
+  * growing (R' > R): new devices join their cluster's edge model
+    (replicated from the cluster average) with zero error-feedback — exactly
+    how a fresh device joins CFEL mid-training;
+  * shrinking (R' < R): departing devices' pending error feedback is folded
+    back into the cluster average (no update is silently lost).
+
+Used together with runtime/checkpoint.py for restart-on-resize
+(tests/test_fault_tolerance.py)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLTopology
+
+
+def _cluster_avg(x, C, Dev):
+    return x.reshape(C, Dev, *x.shape[1:]).mean(axis=1)
+
+
+def resize_state(params, ef, momentum, old: FLTopology, new: FLTopology
+                 ) -> Tuple[Any, Any, Any]:
+    """Map stacked (R_old, ...) FL state onto (R_new, ...)."""
+    Co, Do = old.clusters, old.devices_per_cluster
+    Cn, Dn = new.clusters, new.devices_per_cluster
+
+    def map_leaf(x, fold_ef=None, zero_new=False):
+        # 1. cluster-level view (C_old, ...): devices agree post-round
+        y = _cluster_avg(x, Co, Do)
+        if fold_ef is not None:  # fold departing devices' EF into the model
+            y = y + _cluster_avg(fold_ef, Co, Do)
+        # 2. re-cluster: split/merge cluster models onto C_new
+        if Cn == Co:
+            z = y
+        elif Cn < Co:
+            assert Co % Cn == 0
+            z = y.reshape(Cn, Co // Cn, *y.shape[1:]).mean(axis=1)
+        else:
+            assert Cn % Co == 0
+            z = jnp.repeat(y, Cn // Co, axis=0)
+        # 3. broadcast to the new device count
+        z = jnp.broadcast_to(z[:, None], (Cn, Dn) + z.shape[1:])
+        out = z.reshape(Cn * Dn, *z.shape[2:]).astype(x.dtype)
+        if zero_new:
+            out = jnp.zeros_like(out)
+        return out
+
+    shrinking = Cn * Dn < Co * Do
+    new_params = jax.tree.map(
+        lambda p, e: map_leaf(p, fold_ef=e if shrinking else None),
+        params, ef)
+    new_ef = jax.tree.map(lambda e: map_leaf(e, zero_new=True), ef)
+    new_mom = (jax.tree.map(lambda m: map_leaf(m), momentum)
+               if momentum is not None else None)
+    return new_params, new_ef, new_mom

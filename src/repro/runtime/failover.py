@@ -1,0 +1,57 @@
+"""Coordinator failover + straggler deadlines (paper Sec. 3.2).
+
+The HCEF coordinator is stateless between rounds: its entire per-round state
+is reconstructed from the device reports, so failover = re-election.  We
+model a fleet of edge servers with fail/recover events; the election picks
+the lowest-id live server.  The training driver consults the registry each
+round — a coordinator swap never interrupts training (tested in
+tests/test_fault_tolerance.py)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Set
+
+import numpy as np
+
+
+@dataclass
+class CoordinatorRegistry:
+    num_servers: int
+    fail_prob: float = 0.0      # per-round failure probability per server
+    recover_prob: float = 0.5
+    seed: int = 0
+    down: Set[int] = field(default_factory=set)
+    elections: int = 0
+    _current: Optional[int] = None
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self._current = 0
+
+    def step(self) -> int:
+        """Advance one round of fail/recover dynamics; return coordinator."""
+        for s in range(self.num_servers):
+            if s in self.down:
+                if self.rng.random() < self.recover_prob:
+                    self.down.discard(s)
+            elif self.rng.random() < self.fail_prob:
+                self.down.add(s)
+        if len(self.down) == self.num_servers:  # keep one alive (quorum)
+            self.down.discard(int(self.rng.integers(self.num_servers)))
+        if self._current in self.down:
+            self._current = min(s for s in range(self.num_servers)
+                                if s not in self.down)
+            self.elections += 1
+        return self._current
+
+    @property
+    def current(self) -> int:
+        return self._current
+
+
+def straggler_deadline(mu: np.ndarray, tau: int, quantile: float = 0.9
+                       ) -> float:
+    """Per-round compute deadline: the controller caps rho so stragglers
+    stochastically skip iterations instead of delaying the round (the
+    paper's straggler mitigation; consumed as the time allowance)."""
+    return float(np.quantile(mu * tau, quantile))

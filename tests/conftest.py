@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches see the REAL device count (1 CPU).  Only
+# launch/dryrun.py sets xla_force_host_platform_device_count (per spec).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (reduced same-family configs) + paper model counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_model
+from repro.models.registry import get_model, input_specs
+
+
+def _smoke_batch(cfg, B=2, S=32, rng_seed=0):
+    key = jax.random.PRNGKey(rng_seed)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "vit_stub":
+        batch["patch_embeds"] = jnp.zeros(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one SGD step; shapes + finiteness."""
+    bundle = get_config(arch)
+    cfg = smoke_model(bundle.model)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg)
+    logits = model.forward(cfg, params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    loss2 = model.loss_fn(cfg, new, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    bundle = get_config(arch)
+    cfg = smoke_model(bundle.model)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = _smoke_batch(cfg, B, S)
+    cache = model.init_cache(cfg, B, S + 4,
+                             enc_len=S if cfg.family == "encdec" else 0)
+    lg, cache = model.prefill(cfg, params, batch, cache)
+    assert lg.shape == (B, 1, cfg.vocab_padded)
+    lg2, cache = model.decode_step(cfg, params, cache,
+                                   jnp.ones((B, 1), jnp.int32))
+    assert lg2.shape == (B, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "granite_moe_1b_a400m",
+                                  "mamba2_1p3b", "recurrentgemma_9b",
+                                  "seamless_m4t_large_v2"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced forward logits == prefill+decode logits."""
+    cfg = smoke_model(get_config(arch).model)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _smoke_batch(cfg, B, S)
+    lf = model.forward(cfg, params, batch)
+    cache = model.init_cache(cfg, B, S,
+                             enc_len=S if cfg.family == "encdec" else 0)
+    pre = {k: (v[:, :S - 2] if k == "tokens" else v)
+           for k, v in batch.items()}
+    lg, cache = model.prefill(cfg, params, pre, cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(lf[:, S - 3]),
+                               atol=3e-4, rtol=3e-4)
+    toks = batch["tokens"]
+    lg1, cache = model.decode_step(cfg, params, cache, toks[:, S - 2:S - 1])
+    np.testing.assert_allclose(np.asarray(lg1[:, 0]),
+                               np.asarray(lf[:, S - 2]), atol=3e-4, rtol=3e-4)
+
+
+def test_full_configs_match_spec():
+    """The FULL (non-reduced) configs carry the assigned hyperparameters."""
+    spec = {
+        "mamba2_1p3b": dict(num_layers=48, d_model=2048, vocab_size=50280,
+                            ssm_state=128),
+        "internvl2_2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                             num_kv_heads=8, d_ff=8192, vocab_size=92553),
+        "qwen2_7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                         qkv_bias=True),
+        "phi3_medium_14b": dict(num_layers=40, d_model=5120, num_heads=40,
+                                num_kv_heads=10, d_ff=17920,
+                                vocab_size=100352),
+        "smollm_135m": dict(num_layers=30, d_model=576, num_heads=9,
+                            num_kv_heads=3, d_ff=1536, vocab_size=49152),
+        "codeqwen1p5_7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=32, d_ff=13440,
+                               vocab_size=92416),
+        "seamless_m4t_large_v2": dict(num_layers=24, enc_layers=24,
+                                      d_model=1024, num_heads=16,
+                                      num_kv_heads=16, d_ff=8192,
+                                      vocab_size=256206),
+        "arctic_480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                            num_kv_heads=8, d_ff=4864, vocab_size=32000,
+                            num_experts=128, experts_per_token=2),
+        "granite_moe_1b_a400m": dict(num_layers=24, d_model=1024,
+                                     num_heads=16, num_kv_heads=8, d_ff=512,
+                                     vocab_size=49155, num_experts=32,
+                                     experts_per_token=8),
+        "recurrentgemma_9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                                  num_kv_heads=1, d_ff=12288,
+                                  vocab_size=256000, window=2048),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch).model
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_paper_model_param_counts():
+    """ResNet-20: 269,722; FEMNIST CNN: 6,603,710 (paper Sec. 6.1)."""
+    from repro.configs.resnet20_cifar10 import VISION as RES_V
+    from repro.configs.femnist_cnn import VISION as FEM_V
+    from repro.models.vision import make_vision_model
+    for vc, expected in ((RES_V, 269_722), (FEM_V, 6_603_710)):
+        init_fn, loss_fn, acc_fn, fwd = make_vision_model(vc)
+        params = init_fn(jax.random.PRNGKey(0))
+        n = sum(int(x.size) for x in jax.tree.leaves(params))
+        assert n == expected, (vc.name, n, expected)
+
+
+def test_vision_models_learn():
+    from repro.configs.resnet20_cifar10 import VisionConfig
+    from repro.models.vision import make_vision_model
+    vc = VisionConfig(name="mlp", kind="mlp", image_size=16, channels=1,
+                      num_classes=4)
+    init_fn, loss_fn, acc_fn, fwd = make_vision_model(vc)
+    params = init_fn(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    protos = rng.normal(0, 1, (4, 16, 16, 1)).astype(np.float32)
+    labels = rng.integers(0, 4, 256)
+    imgs = protos[labels] + 0.3 * rng.normal(0, 1, (256, 16, 16, 1)) \
+        .astype(np.float32)
+    batch = {"images": jnp.asarray(imgs), "labels": jnp.asarray(labels)}
+    step = jax.jit(lambda p: jax.tree.map(
+        lambda a, g: a - 0.1 * g, p, jax.grad(loss_fn)(p, batch)))
+    for _ in range(30):
+        params = step(params)
+    assert float(acc_fn(params, batch)) > 0.9

@@ -1,0 +1,180 @@
+"""Hypothesis property-based tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import mixing
+from repro.core.compression import compress_delta
+from repro.core.controller import (BudgetState, DeviceReports,
+                                   solve_p21_theta, solve_p22_rho)
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Compression operator Q: contraction property (paper Eq. 7)
+# ---------------------------------------------------------------------------
+
+@given(x=hnp.arrays(np.float32, (2, 1024),
+                    elements=st.floats(-100, 100, width=32)),
+       theta=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_contraction_property(x, theta):
+    xj = jnp.asarray(x)
+    th = jnp.full((2,), np.float32(theta))
+    for impl in ("pallas", "jnp", "ref"):
+        masked, resid = ops.topk_compress(xj, th, block=256, impl=impl)
+        lhs = np.sum(np.asarray(resid, np.float64) ** 2, axis=1)
+        rhs = (1 - theta + 1e-6) * np.sum(np.asarray(x, np.float64) ** 2,
+                                          axis=1)
+        assert (lhs <= rhs + 1e-4).all(), (impl, lhs, rhs)
+
+
+@given(x=hnp.arrays(np.float32, (3, 512),
+                    elements=st.floats(-10, 10, width=32)),
+       theta=st.floats(0.05, 1.0))
+@settings(**SETTINGS)
+def test_error_feedback_identity(x, theta):
+    """compressed + new_ef == delta + ef (exactly)."""
+    delta = {"a": jnp.asarray(x)}
+    ef = {"a": jnp.asarray(x[::-1] * 0.5)}
+    th = jnp.full((3,), np.float32(theta))
+    comp, new_ef = compress_delta(delta, ef, th, block=128)
+    lhs = np.asarray(comp["a"], np.float64) + np.asarray(new_ef["a"],
+                                                         np.float64)
+    rhs = np.asarray(x, np.float64) + np.asarray(ef["a"], np.float64)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices (Assumption 5)
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(1, 12), kind=st.sampled_from(["ring", "complete"]))
+@settings(**SETTINGS)
+def test_mixing_doubly_stochastic(m, kind):
+    H = mixing.make_mixing(kind, m)
+    mixing.check_mixing(H)
+    assert mixing.zeta(H) < 1.0 - 1e-9 or m == 1
+
+
+@given(m=st.integers(2, 10), p=st.floats(0.0, 1.0), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_erdos_renyi_mixing(m, p, seed):
+    H = mixing.erdos_renyi(m, p, seed)
+    mixing.check_mixing(H)
+    assert mixing.zeta(H) < 1.0  # ring backbone keeps it connected
+
+
+@given(m=st.integers(2, 8))
+@settings(**SETTINGS)
+def test_gossip_preserves_mean(m):
+    H = jnp.asarray(mixing.ring(m), jnp.float32)
+    x = jnp.asarray(np.random.default_rng(m).normal(size=(m, 7)), jnp.float32)
+    y = jnp.einsum("ij,j...->i...", H, x)
+    np.testing.assert_allclose(np.asarray(y.mean(0)), np.asarray(x.mean(0)),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Controller: solutions respect constraints (KKT-style feasibility)
+# ---------------------------------------------------------------------------
+
+def _reports(rng, N):
+    return DeviceReports(
+        sigma2=rng.uniform(0.1, 5.0, N), G2=rng.uniform(0.1, 5.0, N),
+        mu=rng.uniform(75, 150, N), alpha=rng.uniform(1.5, 6.0, N),
+        nu=rng.uniform(50, 400, N), p=rng.uniform(0.1, 1.0, N))
+
+
+@given(seed=st.integers(0, 1000), N=st.integers(2, 32),
+       d_time=st.floats(100, 5000), d_energy=st.floats(50, 5000))
+@settings(**SETTINGS)
+def test_p21_feasible_and_box(seed, N, d_time, d_energy):
+    rng = np.random.default_rng(seed)
+    rep = _reports(rng, N)
+    rho = rng.uniform(0.1, 1.0, N)
+    theta = solve_p21_theta(rho, rep, d_time, d_energy, tau=5)
+    assert ((theta >= 0.05 - 1e-9) & (theta <= 1.0 + 1e-9)).all()
+    # energy constraint holds whenever it is satisfiable at theta_min
+    comm = np.sum(rep.p * rep.nu * theta)
+    floor = np.sum(rep.p * rep.nu * 0.05)
+    room = d_energy - np.sum(rho * 5 * rep.alpha)
+    if room >= floor:
+        assert comm <= room + 1e-6 * max(1.0, abs(room))
+
+
+@given(seed=st.integers(0, 1000), N=st.integers(2, 32),
+       d_time=st.floats(100, 5000), d_energy=st.floats(50, 5000))
+@settings(**SETTINGS)
+def test_p22_feasible_and_box(seed, N, d_time, d_energy):
+    rng = np.random.default_rng(seed)
+    rep = _reports(rng, N)
+    theta = rng.uniform(0.05, 1.0, N)
+    rho = solve_p22_rho(theta, rep, d_time, d_energy, tau=5)
+    assert ((rho >= 0.1 - 1e-9) & (rho <= 1.0 + 1e-9)).all()
+    comp = np.sum(rho * 5 * rep.alpha)
+    floor = np.sum(0.1 * 5 * rep.alpha)
+    room = d_energy - np.sum(rep.p * theta * rep.nu)
+    if room >= floor:
+        assert comp <= room + 1e-6 * max(1.0, abs(room))
+
+
+@given(seed=st.integers(0, 200))
+@settings(**SETTINGS)
+def test_p22_optimality_vs_grid(seed):
+    """Bisection solution beats a uniform-rho grid on the true objective."""
+    rng = np.random.default_rng(seed)
+    N = 8
+    rep = _reports(rng, N)
+    theta = rng.uniform(0.05, 1.0, N)
+    d_time, d_energy = 3000.0, 200.0
+    rho = solve_p22_rho(theta, rep, d_time, d_energy, tau=5)
+    s2, G2 = float(np.mean(rep.sigma2)), float(np.mean(rep.G2))
+
+    def obj(r):
+        return np.sum((2 - theta) * r * (s2 + G2) + 3 * (1 - r) ** 2 * G2)
+
+    def feasible(r):
+        cap = np.clip((d_time - theta * rep.nu) / (5 * rep.mu), 0.1, 1.0)
+        e = np.sum(r * 5 * rep.alpha) + np.sum(rep.p * theta * rep.nu)
+        return (r <= cap + 1e-9).all() and e <= d_energy + 1e-6
+
+    if feasible(rho):
+        for u in np.linspace(0.1, 1.0, 19):
+            r = np.full(N, u)
+            if feasible(r):
+                assert obj(rho) <= obj(r) + 1e-6 * abs(obj(r)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: invariance properties
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100), scale=st.floats(0.5, 2.0))
+@settings(**SETTINGS)
+def test_attention_value_scale_equivariance(seed, scale):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+    o1 = ref.flash_attention_jnp(q, k, v, causal=True)
+    o2 = ref.flash_attention_jnp(q, k, v * scale, causal=True)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1) * scale,
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_attention_permutation_of_batch(seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(3, 8, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(3, 8, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(3, 8, 2, 8)), jnp.float32)
+    perm = np.array([2, 0, 1])
+    o1 = ref.flash_attention_jnp(q, k, v, causal=True)[perm]
+    o2 = ref.flash_attention_jnp(q[perm], k[perm], v[perm], causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

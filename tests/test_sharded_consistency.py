@@ -1,0 +1,74 @@
+"""Sharded-vs-unsharded consistency: the production round step on a fake
+8-device mesh must produce the same numbers as the single-device path.
+
+Runs in a subprocess because xla_force_host_platform_device_count must be
+set before jax initializes (the main test process keeps 1 device)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.round import init_state, make_round_step, FLState
+from repro.dist.policies import make_train_policy
+
+cfg = smoke_model(get_config("smollm_135m").model).replace(
+    d_model=64, d_ff=128)
+topo = FLTopology(clusters=2, devices_per_cluster=2)
+hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+R = topo.num_devices
+state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                      (R * 2 * 2, 32), 0, cfg.vocab_size)}
+keys = jax.random.split(jax.random.PRNGKey(2), R)
+rho = jnp.ones(R)
+theta = jnp.full(R, 0.25)
+
+# --- unsharded reference ---
+step0 = jax.jit(make_round_step(cfg, hcef, topo, policy=None, gossip=True))
+s_ref, m_ref = step0(state, batch, rho, theta, keys)
+
+# --- sharded: mesh (4 data, 2 model), R=4 over data ---
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+policy = make_train_policy(mesh, topo, dp_axes=("data",))
+step1 = jax.jit(make_round_step(cfg, hcef, topo, policy=policy, gossip=True))
+state_sh = FLState(
+    params=jax.tree.map(lambda x, s: jax.device_put(x, s), state.params,
+                        policy.param_shardings(state.params, stacked=True)),
+    momentum=None,
+    ef=jax.tree.map(lambda x, s: jax.device_put(x, s), state.ef,
+                    policy.param_shardings(state.ef, stacked=True)),
+    round_idx=state.round_idx)
+with mesh:
+    s_sh, m_sh = step1(state_sh, batch, rho, theta, keys)
+
+errs = {}
+for (kp, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(s_ref.params)[0],
+        jax.tree_util.tree_flatten_with_path(s_sh.params)[0]):
+    errs[str(kp)] = float(jnp.abs(jnp.asarray(a, jnp.float32)
+                                  - jnp.asarray(b, jnp.float32)).max())
+print(json.dumps({"max_err": max(errs.values()),
+                  "loss_ref": float(m_ref["loss"].mean()),
+                  "loss_sh": float(m_sh["loss"].mean())}))
+"""
+
+
+def test_sharded_round_matches_unsharded():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert abs(out["loss_ref"] - out["loss_sh"]) < 1e-3, out
+    assert out["max_err"] < 5e-3, out
