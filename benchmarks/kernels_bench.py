@@ -1,7 +1,14 @@
 """Kernel microbenchmarks: name,us_per_call,derived CSV (CPU wall-clock of
 the jnp dispatch path; the Pallas path is TPU-target and validated in
-interpret mode by tests)."""
+interpret mode by tests).  Includes the round-step aggregation bench
+(dense (R, R) einsum vs structured factorization vs fused shard_map)."""
 from __future__ import annotations
+
+# 8 fake host devices so the fused shard_map aggregation variant can run on
+# CPU; must be set before jax initializes (harmless on a real TPU backend).
+from repro.dist.compat import ensure_fake_host_devices
+
+ensure_fake_host_devices(8)
 
 import time
 
@@ -20,6 +27,83 @@ def _bench(fn, *args, iters=10):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _param_dim(arch: str) -> int:
+    """Flattened per-replica model size of a paper config (no allocation)."""
+    from repro.models.vision import make_vision_model
+    mod = __import__(f"repro.configs.{arch}", fromlist=["VISION"])
+    init_fn, _, _, _ = make_vision_model(mod.VISION)
+    shapes = jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def aggregation_bench(rng, archs=("femnist_cnn", "resnet20_cifar10"),
+                      Rs=(16, 64, 128), iters=5):
+    """HCEF round aggregation W = B^T diag(1/Dev) H B applied three ways:
+
+      dense       (R, R) einsum over the stacked deltas — the seed path
+      structured  one (C, R) x (R, d) GEMM (mean+H folded) -> broadcast,
+                  the factorization core/round.py now uses off-mesh
+      fused       shard-local mix_local inside a shard_map (8 fake devices)
+
+    C = 8 clusters as in the paper's testbed (Dev = R / 8).  The configs'
+    native topology is R = 64; the dense path's O(R^2 d) term makes it
+    increasingly compute-bound above R ~ 32 while structured/fused stay at
+    the O(R d) bandwidth floor.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import mixing
+    from repro.dist.collectives import mix_local
+    from repro.dist.compat import make_mesh, shard_map
+
+    rows = []
+    n_dev = len(jax.devices())
+    for arch in archs:
+        d = _param_dim(arch)
+        for R in Rs:
+            C = 8
+            Dev = R // C
+            H = jnp.asarray(mixing.make_mixing("ring", C), jnp.float32)
+            cl = np.repeat(np.arange(C), Dev)
+            W = jnp.asarray(
+                mixing.make_mixing("ring", C)[np.ix_(cl, cl)] / Dev,
+                jnp.float32)
+            x = jnp.asarray(rng.normal(size=(R, d)), jnp.float32)
+            tag = f"R{R}_{arch}"
+            it = 3 if x.size * 4 > 5e8 else iters
+
+            f_dense = jax.jit(lambda x, W=W: jnp.einsum("rs,sd->rd", W, x))
+            us_d = _bench(f_dense, x, iters=it)
+            gbps = x.size * 4 / (us_d / 1e6) / 1e9
+            rows.append((f"agg_dense_{tag}", us_d, f"{gbps:.2f}GB/s"))
+
+            M = jnp.repeat(H / Dev, Dev, axis=1)  # (C, R) = H diag(1/Dev) B
+
+            def f_struct(x, M=M, C=C, Dev=Dev):
+                yc = M @ x
+                return jnp.broadcast_to(
+                    yc[:, None], (C, Dev, yc.shape[-1])).reshape(x.shape)
+            f_struct = jax.jit(f_struct)
+            us_s = _bench(f_struct, x, iters=it)
+            rows.append((f"agg_structured_{tag}", us_s,
+                         f"{us_d / us_s:.1f}x_vs_dense"))
+
+            if n_dev >= 8 and R % 8 == 0:
+                mesh = make_mesh((8,), ("data",))
+                fn = shard_map(
+                    lambda xl, C=C, Dev=Dev: mix_local(
+                        xl, clusters=C, dev=Dev, axes=("data",),
+                        hkind="ring"),
+                    mesh=mesh, in_specs=P("data", None),
+                    out_specs=P("data", None), check_vma=False)
+                xs = jax.device_put(
+                    x, NamedSharding(mesh, P("data", None)))
+                f_fused = jax.jit(fn)
+                us_f = _bench(f_fused, xs, iters=it)
+                rows.append((f"agg_fused_{tag}", us_f,
+                             f"{us_d / us_f:.1f}x_vs_dense"))
+    return rows
 
 
 def main():
@@ -58,6 +142,8 @@ def main():
     f = jax.jit(lambda a, g: ops.rglru(a, g)[0])
     us = _bench(f, la, gx)
     rows.append(("rglru_assoc_2k", us, "assoc-scan"))
+
+    rows += aggregation_bench(rng)
 
     print("name,us_per_call,derived")
     for r in rows:

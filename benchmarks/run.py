@@ -1,25 +1,44 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Prints ``name,us_per_call,derived`` CSV blocks:
-  1. kernel microbenchmarks;
+  1. kernel microbenchmarks (persisted to BENCH_kernels.json at repo root,
+     so the perf trajectory across PRs is recorded);
   2. the paper-reproduction suite (Fig. 2/3 + Table 2; quick mode);
   3. roofline summary from the dry-run artifacts (if present).
 
+``--smoke`` runs only the kernel microbenchmarks + JSON dump (CI);
 ``--full`` additionally runs the Fig. 4/5/6/7 sweeps.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
+
+def _write_bench_json(rows) -> None:
+    payload = {name: {"us_per_call": round(us, 1), "derived": derived}
+               for name, us, derived in rows}
+    BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"wrote {BENCH_JSON}")
 
 
 def main() -> None:
     full = "--full" in sys.argv
+    smoke = "--smoke" in sys.argv
     t0 = time.time()
 
     print("== kernel microbenchmarks ==")
     from benchmarks import kernels_bench
-    kernels_bench.main()
+    rows = kernels_bench.main()
+    _write_bench_json(rows)
+
+    if smoke:
+        print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
+        return
 
     print("\n== paper reproduction: Fig. 2/3 + Table 2 ==")
     from benchmarks import fig2_3_convergence

@@ -20,8 +20,9 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
 
 from repro.kernels import ops
 

@@ -19,7 +19,6 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FLTopology, HCEFConfig, ModelConfig
 from repro.core import mixing
@@ -87,17 +86,14 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
     R = topo.num_devices
     H_np = mixing.make_mixing(topo.backhaul, C)
     # Paper Appendix A: the whole aggregation (intra-cluster averaging +
-    # gossip + broadcast-back) is one linear operator W on the device dim:
-    #   W = B^T diag(c) H B    (gossip rounds)
-    #   W = B^T diag(c) B      (intra-only rounds)
-    # Using the (R, R) matrix directly (instead of reshape->(C, Dev)) keeps
-    # the replica dim's sharding intact under GSPMD — no replication of
-    # model-sharded leaves at 480B scale.
-    cluster_of = np.repeat(np.arange(C), Dev)
-    W_np = (H_np[np.ix_(cluster_of, cluster_of)] / Dev if gossip else
-            (cluster_of[:, None] == cluster_of[None, :]).astype(np.float64)
-            / Dev)
-    W = jnp.asarray(W_np, jnp.float32)
+    # gossip + broadcast-back) is one linear operator on the device dim,
+    #   W = B^T diag(1/Dev) H B   (gossip)  /  B^T diag(1/Dev) B  (intra).
+    # It is applied FACTORIZED (per-cluster mean -> (C, C) H matmul ->
+    # broadcast), O(R d) instead of the dense einsum's O(R^2 d).  The
+    # reshape to (C, Dev, ...) is only safe off-mesh: under GSPMD it
+    # destroys the replica dim's sharding (DESIGN.md §Reshape-pitfall), so
+    # the mesh path runs shard-locally via dist.collectives.mix_local.
+    H = jnp.asarray(H_np, jnp.float32)
 
     def device_round(params, mom, batch_tau, key, rho_r):
         """One device's tau local iterations. All args UNSTACKED."""
@@ -156,15 +152,20 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             # Fused per-leaf shard_map: each chip compresses the blocks of
             # its own shard, then the W operator runs as shard-sized
             # recursive-doubling + ring ppermutes (dist/collectives.py).
-            from jax import shard_map
             from jax.sharding import PartitionSpec as PS
+            from repro.dist.compat import shard_map
             from repro.dist.collectives import mix_local
             from repro.core.compression import _compress_flat
 
             shd = policy.param_shardings(state.params, stacked=True)
             specs = jax.tree.map(lambda s: s.spec, shd)
-            rspec = PS(tuple(policy.replica_axes) or None)
             rep_axes = tuple(policy.replica_axes)
+            if R == 1:
+                rep_axes = ()  # inner_dp-only topologies: nothing to mix
+            elif rep_axes and R % policy.axis_size(rep_axes):
+                raise ValueError(  # fail loudly: skipping W would silently
+                    f"R={R} does not tile replica axes {rep_axes}")  # un-FL
+            rspec = PS(rep_axes or None)
             hkind = topo.backhaul if gossip else "none"
 
             def per_leaf(x0l, dl, el, spec):
@@ -179,8 +180,11 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     masked, resid = _compress_flat(flat, ts,
                                                    hcef.block_size, impl)
                     upd = x0s + masked.reshape(ds.shape).astype(x0s.dtype)
+                    # rep_axes == () with R > 1 means the replica dim is
+                    # fully replicated per shard; mix_local then runs the
+                    # dense-local factorization — never skip W silently.
                     y = mix_local(upd, clusters=C, dev=Dev, axes=rep_axes,
-                                  hkind=hkind) if rep_axes else upd
+                                  hkind=hkind) if R > 1 else upd
                     return (y.astype(x0s.dtype),
                             resid.reshape(es.shape).astype(es.dtype))
 
@@ -203,11 +207,23 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                                       error_feedback=hcef.error_feedback,
                                       impl=impl)
 
+            # gossip rounds fold the per-cluster mean and the (C, C) H
+            # matmul into ONE (C, R) x (R, d) GEMM: M = H diag(1/Dev) B,
+            # Dev x less compute than the dense (R, R) einsum at identical
+            # memory traffic; intra rounds are just the per-cluster mean.
+            M = jnp.repeat(H / Dev, Dev, axis=1)  # (C, R)
+
             def aggregate(x0_leaf, comp_leaf):
                 upd = (x0_leaf.astype(jnp.float32)
                        + comp_leaf.astype(jnp.float32))
                 if R > 1:
-                    upd = jnp.einsum("rs,s...->r...", W, upd)
+                    dims = upd.shape[1:]
+                    if gossip:
+                        yc = (M @ upd.reshape(R, -1)).reshape((C,) + dims)
+                    else:
+                        yc = upd.reshape((C, Dev) + dims).mean(axis=1)
+                    upd = jnp.broadcast_to(
+                        yc[:, None], (C, Dev) + dims).reshape(upd.shape)
                 return upd.astype(x0_leaf.dtype)
 
             new_params = jax.tree.map(aggregate, state.params, comp)

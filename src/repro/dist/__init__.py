@@ -1,0 +1,16 @@
+"""repro.dist — the collectives/policy layer.
+
+Everything mesh-shaped lives here:
+
+  compat        version-compatible ``shard_map`` / ``make_mesh`` wrappers
+  collectives   shard-local HCEF aggregation (``mix_local``) and the
+                sparse (value, index) gossip exchange
+  policies      ``Policy`` objects: mesh axes, parameter shardings and
+                activation constraints consumed by models/ and launch/
+  hlo_analysis  collective/byte counting from lowered HLO text
+
+The contract (DESIGN.md §Dist-layer): core/ never touches mesh axis names
+directly — it receives a ``Policy`` and calls ``mix_local`` inside a
+``shard_map`` whose specs come from ``Policy.param_shardings``.
+"""
+from repro.dist.compat import make_mesh, shard_map  # noqa: F401

@@ -1,0 +1,371 @@
+"""Shard-local HCEF aggregation collectives (Paper Eq. 5 / Appendix A).
+
+The round's aggregation operator on the stacked replica dim is
+
+    W = B^T diag(1/Dev) H B        (gossip rounds)
+    W = B^T diag(1/Dev) B          (intra-only rounds)
+
+where B is the (C, R) cluster-membership matrix and H the (C, C)
+doubly-stochastic backhaul mixing matrix.  The seed applied W as a dense
+(R, R) einsum over full-model f32 upcasts — O(R^2 d) FLOPs, 2x peak HBM,
+and an all-gather of every model-sharded leaf under GSPMD.  Here the
+factorization runs directly on shard-local data inside a ``shard_map``:
+
+  1. intra-cluster mean: a local reduction plus (when a cluster spans g > 1
+     shards) a recursive-doubling / ring allreduce over the cluster's shard
+     group, built from ``jax.lax.ppermute`` (O(R d) total bytes);
+  2. gossip: one ppermute "band rotation" per nonzero off-diagonal band of
+     H (ring = 2 bands, Erdos-Renyi ~ p_edge*C bands); ``complete`` is a
+     single psum (the mix is the global mean);
+  3. broadcast-back: a local broadcast (every device of a cluster holds the
+     cluster model after step 1/2).
+
+``sparse_neighbor_exchange`` runs the same band rotations on the top-k
+compressed (value, index) representation, so gossip wire bytes scale with
+theta instead of the dense model size (Li et al., arXiv:2012.11804).
+
+Layout contract: the global replica dim R is split contiguously over the
+mesh axes in ``axes`` (PartitionSpec semantics), R = R_local * n_shards,
+and clusters are contiguous runs of ``dev`` replicas.  Two structured
+layouts are lowered to pure ppermute chains:
+
+  A. dev % R_local == 0  -> each shard's rows live in ONE cluster that
+     spans g = dev // R_local consecutive shards;
+  B. R_local % dev == 0  -> each shard holds Cl = R_local // dev whole
+     clusters.
+
+Any other layout (including multi-axis replica dims, where ppermute over a
+flattened axis tuple is not available on all JAX versions) falls back to a
+masked cluster-sum psum: O(C d_local) memory, still no full-leaf gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing
+
+
+# ---------------------------------------------------------------------------
+# axis helpers (all static under shard_map: psum of a python int folds)
+# ---------------------------------------------------------------------------
+
+def _axes_tuple(axes) -> tuple:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def _n_shards(axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= jax.lax.psum(1, a)
+    return n
+
+
+def _flat_shard_index(axes: tuple):
+    idx = 0
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _rotate(tree, axis: str, shift: int, n: int):
+    """value of shard (i - shift) % n lands on shard i, for every leaf."""
+    if shift % n == 0:
+        return tree
+    perm = [(j, (j + shift) % n) for j in range(n)]
+    return jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), tree)
+
+
+def _group_allreduce_sum(x, axis: str, n: int, g: int):
+    """Allreduce-sum over aligned groups of g consecutive shards.
+
+    Recursive doubling (log2 g ppermute steps) when g is a power of two,
+    ring accumulation (g - 1 steps) otherwise.  Groups are aligned because
+    the layout contract pins cluster boundaries to multiples of g.
+    """
+    if g == 1:
+        return x
+    if g & (g - 1) == 0:  # power of two -> XOR recursive doubling
+        step = 1
+        while step < g:
+            # (j % g) ^ step stays inside the aligned group for step < g
+            perm = [(j, (j - j % g) + ((j % g) ^ step)) for j in range(n)]
+            x = x + jax.lax.ppermute(x, axis, perm)
+            step *= 2
+        return x
+    acc, cur = x, x
+    perm = [(j, (j - j % g) + (j % g + 1) % g) for j in range(n)]
+    for _ in range(g - 1):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        acc = acc + cur
+    return acc
+
+
+def _h_bands(H: np.ndarray) -> Tuple[np.ndarray, dict]:
+    """Split H into its diagonal and the nonzero circulant-offset bands.
+
+    Returns (diag, {offset o: coef[c] = H[c, (c - o) % C]}).  For ring this
+    is {1, C-1}; for ER with ring backbone it is the o's of present edges.
+    """
+    C = H.shape[0]
+    diag = np.ascontiguousarray(np.diag(H))
+    bands = {}
+    for o in range(1, C):
+        coef = np.array([H[c, (c - o) % C] for c in range(C)])
+        if np.any(np.abs(coef) > 0):
+            bands[o] = coef
+    return diag, bands
+
+
+@functools.lru_cache(maxsize=None)
+def _mixing_cached(hkind: str, C: int, p_edge: float, seed: int):
+    H = mixing.make_mixing(hkind, C, p_edge, seed)
+    return _h_bands(H) + (H,)
+
+
+# ---------------------------------------------------------------------------
+# mix_local
+# ---------------------------------------------------------------------------
+
+def mix_local(x, *, clusters: int, dev: int, axes, hkind: str = "ring",
+              p_edge: float = 0.4, seed: int = 0):
+    """Apply the aggregation operator W to this shard's replica slice.
+
+    x: (R_local, *dims) — the local slice of a (R, *dims) stacked-replica
+    array whose leading dim is split contiguously over mesh ``axes``.
+    Must be called inside a ``shard_map`` that maps over ``axes``.
+    ``hkind``: "ring" | "complete" | "erdos_renyi" | "none" (intra only).
+
+    Returns the local slice of W @ x_global, same shape/dtype as x.
+    """
+    axes = _axes_tuple(axes)
+    C, Dev = clusters, dev
+    if not axes:
+        return _mix_dense_local(x, C, Dev, hkind, p_edge, seed)
+    n = _n_shards(axes)
+    R_local = x.shape[0]
+    R = R_local * n
+    assert R == C * Dev, (R, C, Dev)
+    single = len(axes) == 1
+
+    if single and R_local <= Dev and Dev % R_local == 0:
+        return _mix_layout_a(x, axes[0], n, C, Dev, hkind, p_edge, seed)
+    if single and R_local % Dev == 0:
+        return _mix_layout_b(x, axes[0], n, C, Dev, hkind, p_edge, seed)
+    return _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed)
+
+
+def _weighted_bands(mean, rotate_fn, cl, C, hkind, p_edge, seed, dtype):
+    """diag term + one rotation per nonzero band of H.
+
+    mean: this shard's cluster mean(s); rotate_fn(tree, o) must return the
+    band-o rotated means; cl: local cluster index array (traced ok).
+    """
+    diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
+    take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl).astype(dtype)
+    expand = lambda w: w.reshape(w.shape + (1,) * (mean.ndim - w.ndim))
+    y = expand(take(diag)) * mean
+    for o, coef in sorted(bands.items()):
+        y = y + expand(take(coef)) * rotate_fn(mean, o)
+    return y
+
+
+def _mix_layout_a(x, axis, n, C, Dev, hkind, p_edge, seed):
+    """One cluster per shard, spanning g = Dev // R_local shards."""
+    R_local = x.shape[0]
+    g = Dev // R_local
+    s = x.sum(axis=0)  # local intra partial sum, shape dims
+    s = _group_allreduce_sum(s, axis, n, g)
+    mean = (s / Dev).astype(x.dtype)  # cluster mean, replicated over group
+    if hkind == "none":
+        return jnp.broadcast_to(mean[None], x.shape).astype(x.dtype)
+    cl = _flat_shard_index((axis,)) // g
+    if hkind == "complete":
+        # H = 11^T / C: the mix is the global cluster mean.  psum counts
+        # every cluster g times (replicated over its group).
+        y = jax.lax.psum(mean, axis) / (g * C)
+    else:
+        rot = lambda m, o: _rotate(m, axis, o * g, n)
+        y = _weighted_bands(mean, rot, cl, C, hkind, p_edge, seed, x.dtype)
+    return jnp.broadcast_to(y[None], x.shape).astype(x.dtype)
+
+
+def _mix_layout_b(x, axis, n, C, Dev, hkind, p_edge, seed):
+    """Cl = R_local // Dev whole clusters per shard."""
+    R_local = x.shape[0]
+    Cl = R_local // Dev
+    dims = x.shape[1:]
+    means = x.reshape((Cl, Dev) + dims).mean(axis=1)  # (Cl, *dims)
+    if hkind == "none":
+        y = means
+    elif hkind == "complete":
+        y = jax.lax.psum(means.sum(axis=0), axis) / C
+        y = jnp.broadcast_to(y[None], means.shape)
+    else:
+        cl = _flat_shard_index((axis,)) * Cl + jnp.arange(Cl)
+
+        def rot(m, o):
+            # receiving band o in cluster space = shard rotation by q (and
+            # q+1 for the rm rows that wrap a shard boundary), stitched.
+            q, rm = divmod(o, Cl)
+            r_q = _rotate(m, axis, q, n)
+            if rm == 0:
+                return r_q
+            r_q1 = _rotate(m, axis, q + 1, n)
+            return jnp.concatenate([r_q1[Cl - rm:], r_q[:Cl - rm]], axis=0)
+
+        y = _weighted_bands(means, rot, cl, C, hkind, p_edge, seed, x.dtype)
+    y = jnp.broadcast_to(y[:, None], (Cl, Dev) + dims)
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+def _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed):
+    """Masked cluster-sum psum: works for any contiguous layout/axes.
+
+    O(C * d_local) temp memory (vs O(R * d) for a gathered dense mix); the
+    only collective is one psum of the (C, *dims) cluster partial sums.
+    """
+    R_local = x.shape[0]
+    r0 = _flat_shard_index(axes) * R_local
+    cl = (r0 + jnp.arange(R_local)) // Dev  # (R_local,) local cluster ids
+    onehot = (cl[:, None] == jnp.arange(C)[None, :]).astype(jnp.float32)
+    part = jnp.tensordot(onehot, x.astype(jnp.float32), axes=(0, 0))
+    sums = jax.lax.psum(part, axes)  # (C, *dims) global cluster sums
+    means = sums / Dev
+    if hkind != "none":
+        _, _, H = _mixing_cached(hkind, C, p_edge, seed)
+        means = jnp.tensordot(jnp.asarray(H, jnp.float32), means,
+                              axes=(1, 0))
+    return jnp.take(means, cl, axis=0).astype(x.dtype)
+
+
+def _mix_dense_local(x, C, Dev, hkind, p_edge, seed):
+    """No mesh axes: plain structured factorization on the full array."""
+    dims = x.shape[1:]
+    means = x.astype(jnp.float32).reshape((C, Dev) + dims).mean(axis=1)
+    if hkind != "none":
+        _, _, H = _mixing_cached(hkind, C, p_edge, seed)
+        means = jnp.tensordot(jnp.asarray(H, jnp.float32), means,
+                              axes=(1, 0))
+    y = jnp.broadcast_to(means[:, None], (C, Dev) + dims)
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sparse neighbor exchange
+# ---------------------------------------------------------------------------
+
+def _topk_encode(flat, k: int):
+    """flat: (m, L) -> (values, indices) of the k largest-|.| per row."""
+    k = min(k, flat.shape[-1])
+    mag = jnp.abs(flat)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(flat, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def _topk_decode(vals, idx, L: int):
+    m = vals.shape[0]
+    dense = jnp.zeros((m, L), vals.dtype)
+    return dense.at[jnp.arange(m)[:, None], idx].set(vals)
+
+
+def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
+                             k: int, hkind: str = "ring",
+                             p_edge: float = 0.4, seed: int = 0):
+    """Gossip mix where only top-k compressed deltas cross the backhaul.
+
+    delta: (R_local, *dims) shard-local replica deltas.  Each cluster's
+    intra-mean delta is top-k compressed to a (value, index) pair; the
+    ppermute band rotations of ``mix_local`` then move ONLY the compact
+    representation (2k entries per cluster instead of d), so gossip bytes
+    scale with theta = k/d.  The self term uses the uncompressed local
+    mean (it never crosses the wire), so k = d reproduces the dense mix
+    exactly.
+
+    Returns the locally mixed deltas, same shape/dtype as ``delta``.
+    """
+    axes = _axes_tuple(axes)
+    C, Dev = clusters, dev
+    if hkind == "none":
+        return mix_local(delta, clusters=C, dev=Dev, axes=axes, hkind="none")
+
+    dims = delta.shape[1:]
+    L = int(np.prod(dims)) if dims else 1
+    f32 = delta.astype(jnp.float32)
+
+    if not axes:
+        means = f32.reshape((C, Dev) + dims).mean(axis=1).reshape(C, L)
+        y = _sparse_mix_rows(means, means, jnp.arange(C), C, k, hkind,
+                             p_edge, seed, rotate=lambda t, o:
+                             jax.tree.map(lambda v: jnp.roll(v, o, axis=0),
+                                          t))
+        y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
+        return y.reshape(delta.shape).astype(delta.dtype)
+
+    n = _n_shards(axes)
+    R_local = delta.shape[0]
+    R = R_local * n
+    assert R == C * Dev, (R, C, Dev)
+    if len(axes) != 1 or (Dev % R_local != 0 and R_local % Dev != 0):
+        raise NotImplementedError(
+            "sparse_neighbor_exchange requires a single replica axis and an "
+            f"aligned (C, Dev) layout; got axes={axes} R_local={R_local} "
+            f"Dev={Dev}")
+    axis = axes[0]
+
+    if R_local <= Dev:  # layout A: one cluster per shard, group of g shards
+        g = Dev // R_local
+        s = f32.sum(axis=0).reshape(L)
+        s = _group_allreduce_sum(s, axis, n, g)
+        mean = (s / Dev)[None]  # (1, L)
+        cl = (_flat_shard_index((axis,)) // g)[None]
+        rot = lambda t, o: _rotate(t, axis, o * g, n)
+        y = _sparse_mix_rows(mean, mean, cl, C, k, hkind, p_edge, seed, rot)
+        y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
+        return y.astype(delta.dtype)
+
+    # layout B: Cl whole clusters per shard
+    Cl = R_local // Dev
+    means = f32.reshape((Cl, Dev) + dims).mean(axis=1).reshape(Cl, L)
+    cl = _flat_shard_index((axis,)) * Cl + jnp.arange(Cl)
+
+    def rot(tree, o):
+        q, rm = divmod(o, Cl)
+        r_q = _rotate(tree, axis, q, n)
+        if rm == 0:
+            return r_q
+        r_q1 = _rotate(tree, axis, q + 1, n)
+        return jax.tree.map(
+            lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]], axis=0),
+            r_q1, r_q)
+
+    y = _sparse_mix_rows(means, means, cl, C, k, hkind, p_edge, seed, rot)
+    y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
+    return y.reshape(delta.shape).astype(delta.dtype)
+
+
+def _sparse_mix_rows(means, self_dense, cl, C, k, hkind, p_edge, seed,
+                     rotate):
+    """Shared core: compress rows, rotate compact reps per band, decode.
+
+    means/self_dense: (m, L) cluster means (compressed vs self term);
+    rotate(tree, o) returns the band-o rotated pytree of row arrays.
+    """
+    m, L = means.shape
+    diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
+    vals, idx = _topk_encode(means, k)
+    take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
+    y = take(diag)[:, None] * self_dense
+    for o, coef in sorted(bands.items()):
+        r_vals, r_idx = rotate((vals, idx), o)
+        y = y + take(coef)[:, None] * _topk_decode(r_vals, r_idx, L)
+    return y

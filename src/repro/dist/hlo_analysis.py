@@ -1,0 +1,242 @@
+"""Static HLO analysis: loop-weighted FLOP / dot-byte / collective counts.
+
+Parses ``compiled.as_text()`` (post-optimization HLO).  XLA's own
+``cost_analysis()`` counts a while-loop body exactly once, which makes a
+scanned transformer look ~L times cheaper than it is; here every
+computation's totals are weighted by the product of the trip counts of its
+enclosing while loops (trip count recovered from the loop-condition's
+``compare(iv, constant)`` — the standard lowering of ``lax.scan`` /
+``fori_loop``).  Used by launch/dryrun.py and benchmarks/roofline.py.
+
+Returned dict keys:
+  flops            2*M*N*K dot FLOPs (weighted)
+  dot_bytes        operand+result bytes of dots (weighted)
+  coll_total       total collective bytes (weighted, result-shape based)
+  coll:<op>        per-op collective bytes (all-reduce, all-gather, ...)
+  allgather_max_bytes   LARGEST single all-gather result (unweighted) —
+                        the "did we gather a full model leaf?" detector
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# header params may be tuple-typed (nested parens) -> greedy body + '->'
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nb = _DTYPE_BYTES.get(dt, 0)
+    for d in dims.split(","):
+        if d:
+            nb *= int(d)
+    return nb
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        m = _COMP_HDR_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _called_computations(line: str) -> List[str]:
+    out = []
+    for m in _CALLED_RE.finditer(line):
+        grp = m.group(1)
+        if grp is not None:  # {%a, %b} list form
+            out += [g.strip().lstrip("%") for g in grp.split(",") if g.strip()]
+        else:
+            out.append(m.group(2))
+    return out
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Recover a while loop's trip count from its condition computation.
+
+    Scan lowers to ``compare(induction_var, constant(N)), direction=LT``;
+    collect the constants referenced by LT compares and take the SMALLEST
+    (a condition may also compare unrelated values — e.g. a budget guard —
+    and the conjunction can run at most min(...) iterations).  Falls back
+    to 1 (undercounts dynamic loops, never overcounts)."""
+    consts = {}
+    for line in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)",
+                     line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    candidates = []
+    for line in cond_lines:
+        if " compare(" not in line or "direction=LT" not in line:
+            continue
+        for name, val in consts.items():
+            if re.search(r"%?" + re.escape(name) + r"\b", line):
+                candidates.append(val)
+    return min(candidates) if candidates else 1
+
+
+def _instr_stats(line: str) -> Tuple[str, int, float, int]:
+    """-> (kind, result_bytes, dot_flops, operand_bytes) for one line."""
+    m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+"
+                 r"\[[0-9,]*\][^\s]*)\s+([\w\-]+)\(", line)
+    if not m:
+        return "", 0, 0.0, 0
+    shape_str, op = m.groups()
+    if shape_str.startswith("("):  # tuple result
+        elems = [_shape_bytes(f"{dt}[{dims}]")
+                 for dt, dims in _SHAPE_RE.findall(shape_str)]
+        # async '-start' collectives carry (operand, result, ...) tuples:
+        # counting the sum would double the bytes, so take the largest
+        # element (the gathered/reduced result).
+        result_bytes = (max(elems, default=0) if op.endswith("-start")
+                        else sum(elems))
+    else:
+        result_bytes = _shape_bytes(shape_str)
+    flops = 0.0
+    operand_bytes = 0
+    if op in ("dot", "convolution"):
+        # operand shapes appear inline in post-optimization HLO text
+        args = line[line.index(op + "(") + len(op) + 1:]
+        opshapes = _SHAPE_RE.findall(args.split(")")[0])
+        operand_bytes = sum(_shape_bytes(f"{d}[{s}]") for d, s in opshapes)
+        out_elems = 1
+        mm = _SHAPE_RE.match(shape_str)
+        if mm and mm.group(2):
+            for d in mm.group(2).split(","):
+                out_elems *= int(d)
+        k = 1
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if mc and opshapes:
+            lhs_dims = [int(v) for v in opshapes[0][1].split(",") if v]
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    k *= lhs_dims[int(ci)]
+        flops = 2.0 * out_elems * k
+    return op, result_bytes, flops, operand_bytes
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(stripped)
+            entry = m.group(1) if m else None
+    if entry is None or entry not in comps:  # fall back: flat count
+        entry = max(comps, key=lambda c: len(comps[c]), default=None)
+
+    stats = defaultdict(float)
+    allgather_max = 0.0
+    visited_weight: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, weight: float, depth: int = 0):
+        nonlocal allgather_max
+        if name not in comps or depth > 64 or weight <= 0:
+            return
+        for line in comps[name]:
+            op, rbytes, flops, obytes = _instr_stats(line)
+            if not op:
+                continue
+            if op in ("dot", "convolution"):
+                stats["flops"] += weight * flops
+                stats["dot_bytes"] += weight * (rbytes + obytes)
+            base = op.removesuffix("-start").removesuffix("-done")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                stats[f"coll:{base}"] += weight * rbytes
+                stats["coll_total"] += weight * rbytes
+                if base == "all-gather":
+                    allgather_max = max(allgather_max, rbytes)
+            called = _called_computations(line)
+            if " while(" in line:
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    visit(body, weight * trips, depth + 1)
+                continue
+            for c in called:
+                visit(c, weight, depth + 1)
+
+    if entry is not None:
+        visit(entry, 1.0)
+    stats.setdefault("flops", 0.0)
+    stats.setdefault("dot_bytes", 0.0)
+    stats.setdefault("coll_total", 0.0)
+    stats["allgather_max_bytes"] = allgather_max
+    return dict(stats)
+
+
+def max_allgather_bytes(hlo: str) -> float:
+    return analyze_hlo(hlo)["allgather_max_bytes"]
+
+
+def sharded_leaf_bytes(abstract_tree, sharding_tree) -> List[float]:
+    """FULL byte sizes of the leaves sharded beyond their leading dim.
+
+    abstract_tree: arrays/ShapeDtypeStructs; sharding_tree: matching
+    NamedShardings (e.g. from ``Policy.param_shardings(stacked=True)``,
+    where dim 0 is the replica dim and any later entry means
+    model-sharded).  This is the input contract of
+    ``check_no_full_leaf_allgather`` — keep the two in sync."""
+    import math
+
+    import jax
+
+    return [
+        float(math.prod(l.shape)) * l.dtype.itemsize
+        for l, s in zip(jax.tree.leaves(abstract_tree),
+                        jax.tree.leaves(sharding_tree))
+        if any(p is not None for p in tuple(s.spec)[1:])]
+
+
+def check_no_full_leaf_allgather(hlo: str, sharded_leaf_bytes,
+                                 slack: float = 0.5) -> Dict[str, float]:
+    """Assert the fused path never all-gathers a model-sharded leaf.
+
+    sharded_leaf_bytes: iterable of FULL (unsharded, stacked) byte sizes of
+    the model-sharded parameter leaves.  The dense (R, R) einsum failure
+    mode re-materializes EVERY stacked leaf, so an all-gather the size of
+    the largest leaf is the unambiguous signature; comparing against the
+    largest (not smallest) leaf keeps intentional activation gathers
+    (e.g. the flash-attention kv_full constraint) out of the check.
+    """
+    leaves = sorted(float(b) for b in sharded_leaf_bytes)
+    got = max_allgather_bytes(hlo)
+    limit = slack * leaves[-1] if leaves else float("inf")
+    ok = not leaves or got < limit
+    return {"ok": ok, "allgather_max_bytes": got,
+            "largest_sharded_leaf_bytes": leaves[-1] if leaves else 0.0}

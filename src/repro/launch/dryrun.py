@@ -18,7 +18,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeConfig
 from repro.core.round import (FLState, abstract_state, make_prefill_step,
                               make_round_step, make_serve_step)
-from repro.dist.hlo_analysis import analyze_hlo
+from repro.dist.hlo_analysis import (analyze_hlo,
+                                     check_no_full_leaf_allgather,
+                                     sharded_leaf_bytes)
 from repro.dist.policies import Policy, make_serve_policy, make_train_policy
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.models.registry import cache_specs, get_model, input_specs
@@ -173,6 +175,18 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hstats = analyze_hlo(hlo)
     n_chips = int(np.prod(list(mesh.shape.values())))
 
+    agcheck = None
+    if shape.kind == "train":
+        # the fused compress+mix path must never re-materialize a
+        # model-sharded leaf: no single all-gather the size of a full leaf.
+        agcheck = check_no_full_leaf_allgather(
+            hlo, sharded_leaf_bytes(state_abs.params, state_sh.params))
+        if not agcheck["ok"]:
+            print(f"WARNING {arch}/{shape_name}: all-gather of "
+                  f"{agcheck['allgather_max_bytes']:.3e} B >= half the "
+                  f"largest model-sharded leaf "
+                  f"{agcheck['largest_sharded_leaf_bytes']:.3e} B")
+
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
@@ -195,6 +209,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "hlo": {k: float(v) for k, v in hstats.items()},
         "hlo_chars": len(hlo),
     }
+    if agcheck is not None:
+        result["no_full_leaf_allgather"] = agcheck
     if verbose:
         print(f"== {arch} x {shape_name} x "
               f"{'multi' if multi_pod else 'single'} ==")

@@ -1,15 +1,14 @@
 """Production mesh definitions (functions, never module-level constants)."""
 from __future__ import annotations
 
-import jax
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: 16x16 per pod; 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:
@@ -19,5 +18,4 @@ def dp_axes(mesh) -> tuple:
 
 def make_host_mesh():
     """1-device mesh for CPU tests (policy plumbing without sharding)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

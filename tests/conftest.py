@@ -1,8 +1,17 @@
 import os
+import sys
+from pathlib import Path
 
-# Smoke tests and benches see the REAL device count (1 CPU).  Only
-# launch/dryrun.py sets xla_force_host_platform_device_count (per spec).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# CPU-only test environment with 8 FAKE host devices so the collective /
+# sharded-consistency tests can build real meshes in-process.  Both env vars
+# must be set before jax first initializes its backend (safe here: conftest
+# is imported before any test module).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+from repro.dist.compat import ensure_fake_host_devices  # noqa: E402
+
+ensure_fake_host_devices(8)
 
 import numpy as np
 import pytest

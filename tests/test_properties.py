@@ -2,8 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import mixing
 from repro.core.compression import compress_delta

@@ -1,74 +1,121 @@
 """Sharded-vs-unsharded consistency: the production round step on a fake
-8-device mesh must produce the same numbers as the single-device path.
+8-device mesh (conftest's xla_force_host_platform_device_count) must produce
+the same numbers as the single-device path — exercising the fused per-leaf
+shard_map compress + mix_local pipeline end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
 
-Runs in a subprocess because xla_force_host_platform_device_count must be
-set before jax initializes (the main test process keeps 1 device)."""
-import json
-import os
-import subprocess
-import sys
-from pathlib import Path
-
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, smoke_model
 from repro.configs.base import FLTopology, HCEFConfig
-from repro.core.round import init_state, make_round_step, FLState
+from repro.core.round import FLState, init_state, make_round_step
+from repro.dist.compat import make_mesh
 from repro.dist.policies import make_train_policy
 
-cfg = smoke_model(get_config("smollm_135m").model).replace(
-    d_model=64, d_ff=128)
-topo = FLTopology(clusters=2, devices_per_cluster=2)
-hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
-R = topo.num_devices
-state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
-batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
-                                      (R * 2 * 2, 32), 0, cfg.vocab_size)}
-keys = jax.random.split(jax.random.PRNGKey(2), R)
-rho = jnp.ones(R)
-theta = jnp.full(R, 0.25)
-
-# --- unsharded reference ---
-step0 = jax.jit(make_round_step(cfg, hcef, topo, policy=None, gossip=True))
-s_ref, m_ref = step0(state, batch, rho, theta, keys)
-
-# --- sharded: mesh (4 data, 2 model), R=4 over data ---
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-policy = make_train_policy(mesh, topo, dp_axes=("data",))
-step1 = jax.jit(make_round_step(cfg, hcef, topo, policy=policy, gossip=True))
-state_sh = FLState(
-    params=jax.tree.map(lambda x, s: jax.device_put(x, s), state.params,
-                        policy.param_shardings(state.params, stacked=True)),
-    momentum=None,
-    ef=jax.tree.map(lambda x, s: jax.device_put(x, s), state.ef,
-                    policy.param_shardings(state.ef, stacked=True)),
-    round_idx=state.round_idx)
-with mesh:
-    s_sh, m_sh = step1(state_sh, batch, rho, theta, keys)
-
-errs = {}
-for (kp, a), (_, b) in zip(
-        jax.tree_util.tree_flatten_with_path(s_ref.params)[0],
-        jax.tree_util.tree_flatten_with_path(s_sh.params)[0]):
-    errs[str(kp)] = float(jnp.abs(jnp.asarray(a, jnp.float32)
-                                  - jnp.asarray(b, jnp.float32)).max())
-print(json.dumps({"max_err": max(errs.values()),
-                  "loss_ref": float(m_ref["loss"].mean()),
-                  "loss_sh": float(m_sh["loss"].mean())}))
-"""
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 (fake) devices")
 
 
-def test_sharded_round_matches_unsharded():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
-    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, env=env, timeout=900)
-    assert r.returncode == 0, r.stderr[-3000:]
-    out = json.loads(r.stdout.strip().splitlines()[-1])
-    assert abs(out["loss_ref"] - out["loss_sh"]) < 1e-3, out
-    assert out["max_err"] < 5e-3, out
+def _setup():
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+    R = topo.num_devices
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    return cfg, topo, hcef, state, batch, keys
+
+
+@pytest.mark.parametrize("gossip", [True, False])
+def test_sharded_round_matches_unsharded(gossip):
+    cfg, topo, hcef, state, batch, keys = _setup()
+    R = topo.num_devices
+    rho = jnp.ones(R)
+    theta = jnp.full(R, 0.25)
+
+    # --- unsharded reference ---
+    step0 = jax.jit(make_round_step(cfg, hcef, topo, policy=None,
+                                    gossip=gossip))
+    s_ref, m_ref = step0(state, batch, rho, theta, keys)
+
+    # --- sharded: mesh (4 data, 2 model), R=4 over data ---
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    step1 = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                    gossip=gossip))
+    state_sh = FLState(
+        params=jax.tree.map(lambda x, s: jax.device_put(x, s), state.params,
+                            policy.param_shardings(state.params,
+                                                   stacked=True)),
+        momentum=None,
+        ef=jax.tree.map(lambda x, s: jax.device_put(x, s), state.ef,
+                        policy.param_shardings(state.ef, stacked=True)),
+        round_idx=state.round_idx)
+    with mesh:
+        s_sh, m_sh = step1(state_sh, batch, rho, theta, keys)
+
+    assert abs(float(m_ref["loss"].mean()) - float(m_sh["loss"].mean())) \
+        < 1e-3
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_ref.params)[0],
+            jax.tree_util.tree_flatten_with_path(s_sh.params)[0]):
+        err = float(jnp.abs(jnp.asarray(a, jnp.float32)
+                            - jnp.asarray(b, jnp.float32)).max())
+        assert err < 5e-3, (str(kp), err)
+    # error-feedback buffers must agree too (compression ran shard-local)
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_ref.ef)[0],
+            jax.tree_util.tree_flatten_with_path(s_sh.ef)[0]):
+        err = float(jnp.abs(jnp.asarray(a, jnp.float32)
+                            - jnp.asarray(b, jnp.float32)).max())
+        assert err < 5e-3, (str(kp), err)
+
+
+def test_fused_path_emits_no_full_leaf_allgather():
+    """The compiled round step must never re-materialize a model-sharded
+    leaf: all aggregation traffic is shard-sized (collective-permute/psum),
+    which is the whole point of the dist layer (DESIGN.md §Dist-layer)."""
+    from repro.dist.hlo_analysis import (analyze_hlo,
+                                         check_no_full_leaf_allgather,
+                                         sharded_leaf_bytes)
+    cfg, topo, hcef, state, batch, keys = _setup()
+    R = topo.num_devices
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    step = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                   gossip=True))
+    shd = policy.param_shardings(state.params, stacked=True)
+    state_sh = FLState(
+        params=jax.tree.map(jax.device_put, state.params, shd),
+        momentum=None,
+        ef=jax.tree.map(jax.device_put, state.ef,
+                        policy.param_shardings(state.ef, stacked=True)),
+        round_idx=state.round_idx)
+    rho = jnp.ones(R)
+    theta = jnp.full(R, 0.25)
+    with mesh:
+        hlo = step.lower(state_sh, batch, rho, theta,
+                         keys).compile().as_text()
+    sharded_bytes = sharded_leaf_bytes(state.params, shd)
+    assert sharded_bytes, "policy sharded no leaf over the model axis?"
+    chk = check_no_full_leaf_allgather(hlo, sharded_bytes)
+    assert chk["ok"], chk
+    stats = analyze_hlo(hlo)
+    assert stats["coll_total"] > 0  # the mix really runs as collectives
+
+
+def test_train_policy_topology_tiling():
+    """inner_dp > 1 topologies (arctic-style) get a REPLICATED replica dim;
+    genuinely mis-sized topologies fail at policy construction."""
+    mesh = make_mesh((4, 2), ("data", "model"))
+    topo = FLTopology(clusters=2, devices_per_cluster=1, inner_dp=2)
+    p = make_train_policy(mesh, topo, dp_axes=("data",))
+    assert p.replica_axes == ()
+    with pytest.raises(ValueError, match="do not tile"):
+        make_train_policy(mesh, FLTopology(clusters=3,
+                                           devices_per_cluster=1),
+                          dp_axes=("data",))
