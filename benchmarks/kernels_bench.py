@@ -106,6 +106,62 @@ def aggregation_bench(rng, archs=("femnist_cnn", "resnet20_cifar10"),
     return rows
 
 
+def round_step_bench(iters=5):
+    """End-to-end HCEF round step on the 8-fake-device mesh: dense gossip
+    (mix_local band rotations of the full shard) vs the sparse wire path
+    (static-k lax.switch, payloads scale with theta) at each theta level.
+    On CPU the wire path pays encode/decode compute for bytes it cannot
+    save (fake devices share memory); the row exists to TRACK the
+    trajectory — the wire win shows up in dryrun's gossip_wire_bytes.
+    """
+    import dataclasses
+
+    from repro.configs import get_config, smoke_model
+    from repro.configs.base import FLTopology, HCEFConfig
+    from repro.core.round import FLState, init_state, make_round_step
+    from repro.dist.compat import make_mesh
+    from repro.dist.policies import make_train_policy
+
+    if len(jax.devices()) < 8:
+        return []
+    levels = (0.1, 0.4, 1.0)
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+    R = topo.num_devices
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    shd = policy.param_shardings(state.params, stacked=True)
+    state_sh = FLState(
+        params=jax.tree.map(jax.device_put, state.params, shd),
+        momentum=None,
+        ef=jax.tree.map(jax.device_put, state.ef,
+                        policy.param_shardings(state.ef, stacked=True)),
+        round_idx=state.round_idx)
+    rho = jnp.ones(R)
+
+    rows = []
+    variants = [("dense", hcef),
+                ("sparse", dataclasses.replace(hcef, sparse_gossip=True,
+                                               theta_levels=levels))]
+    with mesh:
+        for name, hc in variants:
+            step = jax.jit(make_round_step(cfg, hc, topo, policy=policy,
+                                           gossip=True))
+            for th in levels:
+                theta = jnp.full(R, th)
+                us = _bench(lambda s: step(s, batch, rho, theta, keys),
+                            state_sh, iters=iters)
+                rows.append((f"round_{name}_gossip_th{th}", us,
+                             f"R{R}_smoke_8dev"))
+    return rows
+
+
 def main():
     rng = np.random.default_rng(0)
     rows = []
@@ -144,6 +200,7 @@ def main():
     rows.append(("rglru_assoc_2k", us, "assoc-scan"))
 
     rows += aggregation_bench(rng)
+    rows += round_step_bench()
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -133,9 +133,25 @@ class HCEFConfig:
     # budgets (seconds / joules); None = un-budgeted
     time_budget: Optional[float] = None
     energy_budget: Optional[float] = None
-    # sparse gossip quantization levels for static-k lowering
+    # --- sparse gossip wire path (DESIGN.md §Static-k) ---
+    # Route the fused round step's gossip through sparse_neighbor_exchange:
+    # the per-device theta is quantized to theta_levels, one program branch
+    # is lowered per level (k must be static under jit), and jax.lax.switch
+    # dispatches at runtime, so gossip wire bytes scale with theta.
+    sparse_gossip: bool = False
     theta_levels: Tuple[float, ...] = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
+    wire_dtype: str = "f32"  # f32 | bf16 | int8 (dist/collectives.Wire)
+    wire_block: int = 1024  # wire-encode slab length (block-local offsets)
     error_feedback: bool = True
+
+    def __post_init__(self):
+        if self.wire_dtype not in ("f32", "bf16", "int8"):
+            raise ValueError(f"wire_dtype {self.wire_dtype!r}")
+        if self.wire_dtype == "int8" and self.wire_block > 32768:
+            raise ValueError(  # int16 block-local offsets wrap past 2^15-1
+                f"int8 wire needs wire_block <= 32768, got {self.wire_block}")
+        if self.sparse_gossip and not self.theta_levels:
+            raise ValueError("sparse_gossip requires theta_levels")
 
 
 @dataclass(frozen=True)

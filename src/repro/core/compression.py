@@ -20,6 +20,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.compat import shard_map
@@ -27,8 +28,10 @@ from repro.dist.compat import shard_map
 from repro.kernels import ops
 
 
-def _compress_flat(flat, theta, block, impl):
-    """flat: (R_local, L_local) already local; theta: (R_local,).
+def _compress_flat(flat, theta, block, impl, ef=None):
+    """flat (and optional ef): (R_local, L_local) already local; theta:
+    (R_local,).  The EF add is fused into the kernel (f32 per VMEM tile),
+    so callers pass storage-dtype arrays and never upcast a whole shard.
 
     (A slab-chunked lax.map variant was tried to bound the kernel's f32
     working set but measured WORSE — the map double-buffers transposed
@@ -37,16 +40,18 @@ def _compress_flat(flat, theta, block, impl):
     pad = (-L) % block
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    masked, resid = ops.topk_compress(flat, theta, block=block, impl=impl)
+        if ef is not None:
+            ef = jnp.pad(ef, ((0, 0), (0, pad)))
+    masked, resid = ops.topk_compress(flat, theta, block=block, impl=impl,
+                                      ef=ef)
     return masked[:, :L], resid[:, :L]
 
 
 def _leaf_plain(d, e, theta, block, error_feedback, impl):
     R = d.shape[0]
-    flat = d.astype(jnp.float32).reshape(R, -1)
-    if error_feedback and e is not None:
-        flat = flat + e.astype(jnp.float32).reshape(R, -1)
-    masked, resid = _compress_flat(flat, theta, block, impl)
+    flat = d.reshape(R, -1)
+    ef = (e.reshape(R, -1) if error_feedback and e is not None else None)
+    masked, resid = _compress_flat(flat, theta, block, impl, ef=ef)
     return (masked.reshape(d.shape).astype(d.dtype),
             resid.reshape(d.shape).astype(e.dtype if e is not None
                                           else d.dtype))
@@ -80,10 +85,9 @@ def compress_delta(delta, ef, theta, *, block: int = 1024,
     def per_leaf(d, e, spec):
         def local(dl, el, tl):
             Rl = dl.shape[0]
-            flat = dl.astype(jnp.float32).reshape(Rl, -1)
-            if error_feedback:
-                flat = flat + el.astype(jnp.float32).reshape(Rl, -1)
-            masked, resid = _compress_flat(flat, tl, block, impl)
+            flat = dl.reshape(Rl, -1)
+            ef = el.reshape(Rl, -1) if error_feedback else None
+            masked, resid = _compress_flat(flat, tl, block, impl, ef=ef)
             return (masked.reshape(dl.shape).astype(dl.dtype),
                     resid.reshape(dl.shape).astype(el.dtype))
 
@@ -100,9 +104,33 @@ def compress_delta(delta, ef, theta, *, block: int = 1024,
             treedef.unflatten([r for _, r in out]))
 
 
-def compression_ratio_bytes(theta: float, *, value_bits=16, index_bits=16,
-                            dense_bits=16) -> float:
-    """Wire-format bytes ratio of sparse (value, in-block index) encoding vs
-    dense: used by the cost model. Block-local indices fit in 10 bits; we
-    charge 16 for alignment."""
-    return theta * (value_bits + index_bits) / dense_bits
+# Bits per kept entry of the wire formats in dist/collectives.wire_encode:
+# (value_bits, offset_bits, per-wire-block scale_bits).
+WIRE_FORMAT_BITS = {"f32": (32, 32, 0), "bf16": (16, 32, 0),
+                    "int8": (8, 16, 32)}
+
+
+def compression_ratio_bytes(theta, *, wire_dtype: str = "f32",
+                            wire_block: int = 1024, dense_bits=16):
+    """Wire bytes of the sparse (value, block-local offset) encoding as a
+    fraction of the dense payload — the cost model's effective theta.
+
+    Matches ``dist/collectives.wire_encode`` exactly: theta * wire_block
+    entries of (value_bits + offset_bits) plus one scale per wire block,
+    over wire_block dense entries of dense_bits each.  Accepts scalar or
+    array theta (the controller's per-device vector).
+    """
+    v, o, s = WIRE_FORMAT_BITS[wire_dtype]
+    return (np.asarray(theta) * (v + o) + s / wire_block) / dense_bits
+
+
+def quantize_theta(theta, levels):
+    """Round each theta UP to the nearest level (conservative: the wire
+    never ships fewer coordinates than the controller asked for).  Values
+    above the largest level clamp to it.  numpy in / numpy out — used at
+    the round-step call sites (launch/train.py, runtime/driver.py) so the
+    static-k branch lowered for a level matches the Q the devices ran."""
+    lv = np.sort(np.unique(np.asarray(levels, np.float64)))
+    idx = np.minimum(np.searchsorted(lv, np.asarray(theta, np.float64),
+                                     side="left"), len(lv) - 1)
+    return lv[idx].astype(np.float32)

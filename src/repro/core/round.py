@@ -154,7 +154,8 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             # recursive-doubling + ring ppermutes (dist/collectives.py).
             from jax.sharding import PartitionSpec as PS
             from repro.dist.compat import shard_map
-            from repro.dist.collectives import mix_local
+            from repro.dist.collectives import (mix_local,
+                                                sparse_neighbor_exchange)
             from repro.core.compression import _compress_flat
 
             shd = policy.param_shardings(state.params, stacked=True)
@@ -167,24 +168,35 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     f"R={R} does not tile replica axes {rep_axes}")  # un-FL
             rspec = PS(rep_axes or None)
             hkind = topo.backhaul if gossip else "none"
+            # Sparse wire path (DESIGN.md §Static-k): the level-independent
+            # work (compress + intra mean + broadcast-back) runs ONCE with
+            # hkind="none"; the gossip bands then run per quantized theta
+            # level inside a lax.switch, so each branch's only collectives
+            # are band-rotation ppermutes of the compact wire payload.
+            # At theta < 1 the NEIGHBOR terms of the mix are top-k
+            # approximations of the gossiped edge models (self term exact),
+            # i.e. a sparsified application of H — wire-side error feedback
+            # (CHOCO-style estimate state) is a ROADMAP item.
+            sparse = hcef.sparse_gossip and gossip and R > 1
 
-            def per_leaf(x0l, dl, el, spec):
+            def per_leaf(x0l, dl, el, spec, mix_hkind):
                 def local(x0s, ds, es, ts):
-                    # All math in the param dtype: f32 upcasts of whole model
-                    # shards would double peak HBM (kernel thresholds are
-                    # computed in f32 internally, per VMEM block).
+                    # No caller-side f32 upcast: the top-k kernel adds the
+                    # error feedback and thresholds in f32 internally, per
+                    # VMEM block (bf16-native path).
                     Rl = ds.shape[0]
                     flat = ds.reshape(Rl, -1)
-                    if hcef.error_feedback:
-                        flat = flat + es.reshape(Rl, -1).astype(flat.dtype)
+                    ef_flat = (es.reshape(Rl, -1) if hcef.error_feedback
+                               else None)
                     masked, resid = _compress_flat(flat, ts,
-                                                   hcef.block_size, impl)
+                                                   hcef.block_size, impl,
+                                                   ef=ef_flat)
                     upd = x0s + masked.reshape(ds.shape).astype(x0s.dtype)
                     # rep_axes == () with R > 1 means the replica dim is
                     # fully replicated per shard; mix_local then runs the
                     # dense-local factorization — never skip W silently.
                     y = mix_local(upd, clusters=C, dev=Dev, axes=rep_axes,
-                                  hkind=hkind) if R > 1 else upd
+                                  hkind=mix_hkind) if R > 1 else upd
                     return (y.astype(x0s.dtype),
                             resid.reshape(es.shape).astype(es.dtype))
 
@@ -197,10 +209,40 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             flat_d = treedef.flatten_up_to(delta)
             flat_e = treedef.flatten_up_to(state.ef)
             flat_s = treedef.flatten_up_to(specs)
-            outs = [per_leaf(x, d, e, s) for x, d, e, s in
-                    zip(flat_x, flat_d, flat_e, flat_s)]
-            new_params = treedef.unflatten([p for p, _ in outs])
+            outs = [per_leaf(x, d, e, s, "none" if sparse else hkind)
+                    for x, d, e, s in zip(flat_x, flat_d, flat_e, flat_s)]
+            new_flat = [p for p, _ in outs]
             ef = treedef.unflatten([r for _, r in outs])
+
+            if sparse:
+                levels = tuple(sorted({float(t)
+                                       for t in hcef.theta_levels}))
+                lv = jnp.asarray(levels, jnp.float32)
+                # smallest level >= max per-device theta (conservative:
+                # the wire never ships fewer coordinates than Q kept).
+                idx = jnp.minimum(
+                    jnp.searchsorted(lv, jnp.max(theta), side="left"),
+                    len(levels) - 1).astype(jnp.int32)
+
+                def gossip_leaf(ml, spec, level):
+                    def local_g(ms):
+                        return sparse_neighbor_exchange(
+                            ms, clusters=C, dev=Dev, axes=rep_axes,
+                            theta=level, hkind=hkind,
+                            wire_dtype=hcef.wire_dtype,
+                            wire_block=hcef.wire_block, intra_done=True)
+
+                    return shard_map(local_g, mesh=mesh, in_specs=(spec,),
+                                     out_specs=spec, check_vma=False)(ml)
+
+                def branch(level):
+                    return lambda ms: [gossip_leaf(m, s, level)
+                                      for m, s in zip(ms, flat_s)]
+
+                new_flat = jax.lax.switch(idx, [branch(l) for l in levels],
+                                          new_flat)
+                metrics["theta_wire"] = jnp.take(lv, idx)
+            new_params = treedef.unflatten(new_flat)
         else:
             comp, ef = compress_delta(delta, state.ef, theta,
                                       block=hcef.block_size,

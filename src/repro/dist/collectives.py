@@ -22,7 +22,20 @@ factorization runs directly on shard-local data inside a ``shard_map``:
 
 ``sparse_neighbor_exchange`` runs the same band rotations on the top-k
 compressed (value, index) representation, so gossip wire bytes scale with
-theta instead of the dense model size (Li et al., arXiv:2012.11804).
+theta instead of the dense model size (Li et al., arXiv:2012.11804).  The
+compact representation is BLOCK-LOCAL (DESIGN.md §Static-k): each
+``wire_block``-sized slab of the flattened row keeps its own k_b largest
+entries, so indices are block-local offsets (int16-packable) and the block
+id is implicit from position.  ``wire_encode`` / ``wire_decode`` implement
+the three wire dtypes:
+
+    f32   values f32, offsets int32           (8   B / kept entry)
+    bf16  values bf16, offsets int32          (6   B / kept entry)
+    int8  values int8 scaled per wire block,  (3 + 4/k_b B / kept entry)
+          offsets int16, scales f32 per block
+
+The decode of an f32 wire is bit-exact, so k_b = wire_block reproduces the
+dense mix bit-for-bit.
 
 Layout contract: the global replica dim R is split contiguously over the
 mesh axes in ``axes`` (PartitionSpec semantics), R = R_local * n_shards,
@@ -41,13 +54,15 @@ masked cluster-sum psum: O(C d_local) memory, still no full-leaf gather.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mixing
+
+WIRE_DTYPES = ("f32", "bf16", "int8")
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +97,37 @@ def _rotate(tree, axis: str, shift: int, n: int):
         return tree
     perm = [(j, (j + shift) % n) for j in range(n)]
     return jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), tree)
+
+
+def _axis_sizes(axes: tuple) -> tuple:
+    return tuple(jax.lax.psum(1, a) for a in axes)
+
+
+def _rotate_flat(tree, axes: tuple, shift: int, sizes: tuple):
+    """Cyclic rotation by ``shift`` of the FLAT multi-axis shard index.
+
+    flat = i0 * prod(sizes[1:]) + ... + i_last.  A flat rotation by s
+    decomposes per axis: rotate the trailing axes by r = s mod n_rest
+    (recursively exact), then rotate axis 0 by q = s // n_rest — except the
+    trailing-rotation WRAPPED for receivers whose trailing flat index is
+    < r, which need q + 1.  Both axis-0 rotations are sent and the receiver
+    selects by its own (static-per-device, traced) trailing index: pure
+    ppermutes, at most 2^(len(axes)-1) + len(axes) - 1 of them.
+    """
+    if len(axes) == 1:
+        return _rotate(tree, axes[0], shift, sizes[0])
+    n_rest = 1
+    for s in sizes[1:]:
+        n_rest *= s
+    shift = shift % (sizes[0] * n_rest)
+    q, r = divmod(shift, n_rest)
+    t = _rotate_flat(tree, axes[1:], r, sizes[1:]) if r else tree
+    t_q = _rotate(t, axes[0], q, sizes[0])
+    if r == 0:
+        return t_q
+    t_q1 = _rotate(t, axes[0], q + 1, sizes[0])
+    wrapped = _flat_shard_index(axes[1:]) < r
+    return jax.tree.map(lambda a, b: jnp.where(wrapped, a, b), t_q1, t_q)
 
 
 def _group_allreduce_sum(x, axis: str, n: int, g: int):
@@ -260,36 +306,128 @@ def _mix_dense_local(x, C, Dev, hkind, p_edge, seed):
 
 
 # ---------------------------------------------------------------------------
+# quantized (value, index) wire format
+# ---------------------------------------------------------------------------
+
+class Wire(NamedTuple):
+    """Compact block-local top-k representation of a batch of rows.
+
+    vals: (m, nb, k_b) kept values in the wire dtype (f32 / bf16 / int8);
+    off:  (m, nb, k_b) block-LOCAL offsets (int32, or int16 for int8 wire);
+    scale:(m, nb) f32 per-block dequant scales, or None for f32/bf16.
+    The wire-block id is implicit from position — that is what makes the
+    offsets block-local and int16-packable.
+    """
+    vals: jnp.ndarray
+    off: jnp.ndarray
+    scale: Optional[jnp.ndarray]
+
+
+def _wire_block_of(L: int, wire_block: int) -> int:
+    return max(1, min(int(wire_block), int(L)))
+
+
+def wire_k(theta: float, L: int, wire_block: int = 1024) -> int:
+    """Static per-wire-block k for a compression level theta (k_b)."""
+    wb = _wire_block_of(L, wire_block)
+    return max(1, min(wb, int(np.ceil(float(theta) * wb))))
+
+
+def wire_bytes_per_row(theta: float, L: int, *, wire_dtype: str = "f32",
+                       wire_block: int = 1024) -> int:
+    """Exact bytes one encoded row occupies on the wire (cost model)."""
+    wb = _wire_block_of(L, wire_block)
+    nb = -(-L // wb)
+    k_b = wire_k(theta, L, wire_block)
+    val_b, off_b, scale_b = {"f32": (4, 4, 0), "bf16": (2, 4, 0),
+                             "int8": (1, 2, 4)}[wire_dtype]
+    return nb * (k_b * (val_b + off_b) + scale_b)
+
+
+def wire_encode(rows, k_b: int, *, wire_block: int = 1024,
+                wire_dtype: str = "f32") -> Wire:
+    """rows: (m, L) f32 -> block-local top-k_b Wire (static shapes).
+
+    Each wire_block-sized slab keeps its k_b largest-|.| entries.  Rows are
+    zero-padded to a multiple of the wire block; pad coordinates decode to
+    the pad region and are sliced off by ``wire_decode``.
+    """
+    if wire_dtype not in WIRE_DTYPES:
+        raise ValueError(f"wire_dtype {wire_dtype!r} not in {WIRE_DTYPES}")
+    m, L = rows.shape
+    wb = _wire_block_of(L, wire_block)
+    if wire_dtype == "int8" and wb > 32768:
+        raise ValueError(  # int16 offsets wrap past 2^15 - 1 (silent scatter
+            f"int8 wire needs wire_block <= 32768, got {wb}")  # corruption)
+    pad = (-L) % wb
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+    nb = (L + pad) // wb
+    xb = rows.reshape(m, nb, wb)
+    k_b = max(1, min(int(k_b), wb))
+    _, off = jax.lax.top_k(jnp.abs(xb), k_b)
+    vals = jnp.take_along_axis(xb, off, axis=-1)
+    if wire_dtype == "f32":
+        return Wire(vals.astype(jnp.float32), off.astype(jnp.int32), None)
+    if wire_dtype == "bf16":
+        return Wire(vals.astype(jnp.bfloat16), off.astype(jnp.int32), None)
+    scale = jnp.max(jnp.abs(vals), axis=-1)  # (m, nb)
+    q = jnp.round(vals / jnp.maximum(scale, 1e-30)[..., None] * 127.0)
+    return Wire(q.astype(jnp.int8), off.astype(jnp.int16),
+                scale.astype(jnp.float32))
+
+
+def wire_decode(wire: Wire, L: int, *, wire_block: int = 1024):
+    """Wire -> dense (m, L) f32.  Exact inverse of encode for f32 wires."""
+    vals, off, scale = wire
+    m, nb, k_b = vals.shape
+    wb = _wire_block_of(L, wire_block)
+    v = vals.astype(jnp.float32)
+    if scale is not None:
+        v = v * (scale / 127.0)[..., None]
+    dense = jnp.zeros((m, nb, wb), jnp.float32)
+    dense = dense.at[jnp.arange(m)[:, None, None],
+                     jnp.arange(nb)[None, :, None],
+                     off.astype(jnp.int32)].set(v)
+    return dense.reshape(m, nb * wb)[:, :L]
+
+
+# ---------------------------------------------------------------------------
 # sparse neighbor exchange
 # ---------------------------------------------------------------------------
 
-def _topk_encode(flat, k: int):
-    """flat: (m, L) -> (values, indices) of the k largest-|.| per row."""
-    k = min(k, flat.shape[-1])
-    mag = jnp.abs(flat)
-    _, idx = jax.lax.top_k(mag, k)
-    vals = jnp.take_along_axis(flat, idx, axis=-1)
-    return vals, idx.astype(jnp.int32)
-
-
-def _topk_decode(vals, idx, L: int):
-    m = vals.shape[0]
-    dense = jnp.zeros((m, L), vals.dtype)
-    return dense.at[jnp.arange(m)[:, None], idx].set(vals)
-
-
 def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
-                             k: int, hkind: str = "ring",
-                             p_edge: float = 0.4, seed: int = 0):
-    """Gossip mix where only top-k compressed deltas cross the backhaul.
+                             k: Optional[int] = None,
+                             theta: Optional[float] = None,
+                             hkind: str = "ring",
+                             p_edge: float = 0.4, seed: int = 0,
+                             wire_dtype: str = "f32",
+                             wire_block: int = 1024,
+                             intra_done: bool = False):
+    """Gossip mix where only compact wire-encoded deltas cross the backhaul.
 
     delta: (R_local, *dims) shard-local replica deltas.  Each cluster's
-    intra-mean delta is top-k compressed to a (value, index) pair; the
-    ppermute band rotations of ``mix_local`` then move ONLY the compact
-    representation (2k entries per cluster instead of d), so gossip bytes
-    scale with theta = k/d.  The self term uses the uncompressed local
-    mean (it never crosses the wire), so k = d reproduces the dense mix
-    exactly.
+    intra-mean delta is wire-encoded (block-local top-k_b, see
+    ``wire_encode``); the ppermute band rotations of ``mix_local`` then
+    move ONLY the compact representation instead of the dense d entries,
+    so gossip bytes scale with theta = k/d.  The self term uses the
+    uncompressed local mean (it never crosses the wire), so k = d with an
+    f32 wire reproduces the dense mix exactly.
+
+    ``k``: global per-row coordinate budget, or ``theta``: the compression
+    level directly (exactly one must be given; both are STATIC — the
+    caller lowers one program per quantized theta level, DESIGN.md
+    §Static-k).  ``intra_done=True`` asserts the rows are already
+    intra-cluster means (replicated within each cluster, e.g. the output
+    of ``mix_local(..., hkind="none")``): the intra reduction is then
+    skipped, so the only collectives are the theta-scaled band rotations.
+
+    Multi-axis replica dims lower to flat-index rotations
+    (``_rotate_flat``) when the (C, Dev) layout is aligned; a cluster
+    spanning a shard group that does not divide the innermost axis falls
+    back to a masked psum of the dense means with a LOCAL encode/decode
+    round-trip, which preserves the sparse operator's math (but not its
+    wire savings — same contract as ``mix_local``'s psum fallback).
 
     Returns the locally mixed deltas, same shape/dtype as ``delta``.
     """
@@ -300,72 +438,119 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
 
     dims = delta.shape[1:]
     L = int(np.prod(dims)) if dims else 1
+    if (k is None) == (theta is None):
+        raise ValueError("pass exactly one of k= / theta=")
+    wb = _wire_block_of(L, wire_block)
+    if theta is not None:
+        k_b = wire_k(theta, L, wire_block)
+    else:
+        k_b = max(1, min(wb, int(np.ceil(int(k) * wb / L))))
+    wire_kw = dict(k_b=k_b, wb=wb, wire_dtype=wire_dtype)
     f32 = delta.astype(jnp.float32)
 
     if not axes:
-        means = f32.reshape((C, Dev) + dims).mean(axis=1).reshape(C, L)
-        y = _sparse_mix_rows(means, means, jnp.arange(C), C, k, hkind,
+        xb = f32.reshape((C, Dev) + dims)
+        means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(C, L)
+        y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind,
                              p_edge, seed, rotate=lambda t, o:
                              jax.tree.map(lambda v: jnp.roll(v, o, axis=0),
-                                          t))
+                                          t), **wire_kw)
         y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
 
     n = _n_shards(axes)
+    sizes = _axis_sizes(axes)
     R_local = delta.shape[0]
     R = R_local * n
     assert R == C * Dev, (R, C, Dev)
-    if len(axes) != 1 or (Dev % R_local != 0 and R_local % Dev != 0):
-        raise NotImplementedError(
-            "sparse_neighbor_exchange requires a single replica axis and an "
-            f"aligned (C, Dev) layout; got axes={axes} R_local={R_local} "
-            f"Dev={Dev}")
-    axis = axes[0]
 
-    if R_local <= Dev:  # layout A: one cluster per shard, group of g shards
+    if R_local <= Dev and Dev % R_local == 0:
+        # layout A: one cluster per shard, spanning a group of g shards.
         g = Dev // R_local
-        s = f32.sum(axis=0).reshape(L)
-        s = _group_allreduce_sum(s, axis, n, g)
-        mean = (s / Dev)[None]  # (1, L)
-        cl = (_flat_shard_index((axis,)) // g)[None]
-        rot = lambda t, o: _rotate(t, axis, o * g, n)
-        y = _sparse_mix_rows(mean, mean, cl, C, k, hkind, p_edge, seed, rot)
-        y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
-        return y.astype(delta.dtype)
+        group_ok = (len(axes) == 1) or g == 1 or sizes[-1] % g == 0
+        if group_ok:
+            if intra_done:
+                mean = f32[0].reshape(L)[None]  # rows already the mean
+            else:
+                s = f32.sum(axis=0).reshape(L)
+                if g > 1:
+                    s = _group_allreduce_sum(s, axes[-1], sizes[-1], g)
+                mean = (s / Dev)[None]
+            cl = (_flat_shard_index(axes) // g)[None]
+            rot = lambda t, o: _rotate_flat(t, axes, o * g, sizes)
+            y = _sparse_mix_rows(mean, mean, cl, C, hkind, p_edge, seed,
+                                 rot, **wire_kw)
+            y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
+            return y.astype(delta.dtype)
+        return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
+                                hkind, p_edge, seed,
+                                **wire_kw).reshape(delta.shape).astype(
+                                    delta.dtype)
 
-    # layout B: Cl whole clusters per shard
-    Cl = R_local // Dev
-    means = f32.reshape((Cl, Dev) + dims).mean(axis=1).reshape(Cl, L)
-    cl = _flat_shard_index((axis,)) * Cl + jnp.arange(Cl)
+    if R_local % Dev == 0:
+        # layout B: Cl whole clusters per shard.
+        Cl = R_local // Dev
+        xb = f32.reshape((Cl, Dev) + dims)
+        means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(Cl, L)
+        cl = _flat_shard_index(axes) * Cl + jnp.arange(Cl)
 
-    def rot(tree, o):
-        q, rm = divmod(o, Cl)
-        r_q = _rotate(tree, axis, q, n)
-        if rm == 0:
-            return r_q
-        r_q1 = _rotate(tree, axis, q + 1, n)
-        return jax.tree.map(
-            lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]], axis=0),
-            r_q1, r_q)
+        def rot(tree, o):
+            q, rm = divmod(o, Cl)
+            r_q = _rotate_flat(tree, axes, q, sizes)
+            if rm == 0:
+                return r_q
+            r_q1 = _rotate_flat(tree, axes, q + 1, sizes)
+            return jax.tree.map(
+                lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]],
+                                             axis=0), r_q1, r_q)
 
-    y = _sparse_mix_rows(means, means, cl, C, k, hkind, p_edge, seed, rot)
-    y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
-    return y.reshape(delta.shape).astype(delta.dtype)
+        y = _sparse_mix_rows(means, means, cl, C, hkind, p_edge, seed, rot,
+                             **wire_kw)
+        y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
+        return y.reshape(delta.shape).astype(delta.dtype)
+
+    return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
+                            p_edge, seed,
+                            **wire_kw).reshape(delta.shape).astype(
+                                delta.dtype)
 
 
-def _sparse_mix_rows(means, self_dense, cl, C, k, hkind, p_edge, seed,
-                     rotate):
-    """Shared core: compress rows, rotate compact reps per band, decode.
+def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
+                     *, k_b, wb, wire_dtype):
+    """Misaligned (C, Dev) layouts: masked psum of the dense cluster means,
+    then the sparse operator applied LOCALLY (encode/decode round-trip on
+    the neighbor terms).  Math identical to the structured paths; wire
+    bytes are the dense means (same contract as ``mix_local``'s fallback).
+    The sum/Dev formula is intra_done-agnostic: raw rows sum to the cluster
+    sum, pre-averaged rows sum to Dev * mean — both divide to the mean.
+    """
+    R_local, L = f32_rows.shape
+    r0 = _flat_shard_index(axes) * R_local
+    cl = (r0 + jnp.arange(R_local)) // Dev
+    onehot = (cl[:, None] == jnp.arange(C)[None, :]).astype(jnp.float32)
+    part = jnp.tensordot(onehot, f32_rows, axes=(0, 0))
+    sums = jax.lax.psum(part, axes)  # (C, L) cluster sums (or Dev * mean)
+    means = sums / Dev
+    y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind, p_edge,
+                         seed, rotate=lambda t, o: jax.tree.map(
+                             lambda v: jnp.roll(v, o, axis=0), t),
+                         k_b=k_b, wb=wb, wire_dtype=wire_dtype)
+    return jnp.take(y, cl, axis=0)
+
+
+def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
+                     rotate, *, k_b, wb, wire_dtype):
+    """Shared core: wire-encode rows, rotate the Wire per band, decode.
 
     means/self_dense: (m, L) cluster means (compressed vs self term);
     rotate(tree, o) returns the band-o rotated pytree of row arrays.
     """
     m, L = means.shape
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
-    vals, idx = _topk_encode(means, k)
+    wire = wire_encode(means, k_b, wire_block=wb, wire_dtype=wire_dtype)
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
     y = take(diag)[:, None] * self_dense
     for o, coef in sorted(bands.items()):
-        r_vals, r_idx = rotate((vals, idx), o)
-        y = y + take(coef)[:, None] * _topk_decode(r_vals, r_idx, L)
+        r_wire = Wire(*rotate(tuple(wire), o))
+        y = y + take(coef)[:, None] * wire_decode(r_wire, L, wire_block=wb)
     return y

@@ -13,6 +13,9 @@ Returned dict keys:
   dot_bytes        operand+result bytes of dots (weighted)
   coll_total       total collective bytes (weighted, result-shape based)
   coll:<op>        per-op collective bytes (all-reduce, all-gather, ...)
+  gossip_wire_bytes     collective-permute payload bytes (weighted) — the
+                        gossip/backhaul wire traffic of the dist layer's
+                        ppermute band rotations (DESIGN.md §Static-k)
   allgather_max_bytes   LARGEST single all-gather result (unweighted) —
                         the "did we gather a full model leaf?" detector
 """
@@ -196,6 +199,11 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
     stats.setdefault("flops", 0.0)
     stats.setdefault("dot_bytes", 0.0)
     stats.setdefault("coll_total", 0.0)
+    # ppermute payloads ARE the gossip/backhaul wire bytes: the dist layer
+    # lowers intra-cluster reductions and band rotations to
+    # collective-permute, and the sparse wire path's whole point is that
+    # these bytes scale with theta (checked below).
+    stats["gossip_wire_bytes"] = stats.get("coll:collective-permute", 0.0)
     stats["allgather_max_bytes"] = allgather_max
     return dict(stats)
 
@@ -221,6 +229,68 @@ def sharded_leaf_bytes(abstract_tree, sharding_tree) -> List[float]:
         for l, s in zip(jax.tree.leaves(abstract_tree),
                         jax.tree.leaves(sharding_tree))
         if any(p is not None for p in tuple(s.spec)[1:])]
+
+
+def _permute_bytes_in(comps: Dict[str, List[str]], name: str,
+                      depth: int = 0) -> float:
+    """Total collective-permute payload bytes reachable from computation
+    ``name`` (branch bodies have no scanned loops; plain recursion)."""
+    if name not in comps or depth > 64:
+        return 0.0
+    total = 0.0
+    for line in comps[name]:
+        op, rbytes, _, _ = _instr_stats(line)
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base == "collective-permute" and not op.endswith("-done"):
+            total += rbytes
+        for c in _called_computations(line):
+            total += _permute_bytes_in(comps, c, depth + 1)
+    return total
+
+
+def check_gossip_bytes_scale_with_theta(
+        hlo: str, theta_levels, *, slack: float = 2.0) -> Dict[str, object]:
+    """Verify the static-k lowering: the round step's ``lax.switch`` over
+    ``theta_levels`` must lower to conditionals whose branch payloads (the
+    gossip band-rotation collective-permutes) grow with the level.
+
+    Checks every ``conditional`` with len(theta_levels) branch computations
+    that contains any collective-permute (lax.switch branch order is the
+    level order).  ok iff at least one such conditional exists, every
+    branch gossips (> 0 permute bytes), bytes are nondecreasing in the
+    level, and the smallest level's bytes are within ``slack`` of the
+    proportional share (bytes_min / bytes_max <= slack * k_min / k_max) —
+    i.e. the branches really ship the 2k-entry compact representation, not
+    a dense payload plus a theta-sized rider.
+    """
+    # dedupe to match core/round.py's lowering (one branch per UNIQUE level)
+    levels = sorted({float(t) for t in theta_levels})
+    N = len(levels)
+    comps = _split_computations(hlo)
+    checked = []
+    ok = True
+    for lines in comps.values():
+        for line in lines:
+            if " conditional(" not in line:
+                continue
+            branches = _called_computations(line)
+            if len(branches) != N:
+                continue
+            per_branch = [_permute_bytes_in(comps, b) for b in branches]
+            if not any(per_branch):
+                continue  # a non-gossip switch (none in practice)
+            mono = all(a <= b for a, b in zip(per_branch, per_branch[1:]))
+            # k = ceil(level * wire_block) -> proportional byte share
+            share = max(levels[0] / levels[-1], 1e-9)
+            prop = (per_branch[0] > 0
+                    and per_branch[0] <= slack * share * per_branch[-1])
+            ok = ok and mono and prop
+            checked.append({"branch_permute_bytes": per_branch,
+                            "monotone": mono, "proportional": prop})
+    if not checked:
+        ok = False
+    return {"ok": ok, "n_switches": len(checked), "levels": levels,
+            "switches": checked}
 
 
 def check_no_full_leaf_allgather(hlo: str, sharded_leaf_bytes,

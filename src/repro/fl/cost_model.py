@@ -1,24 +1,57 @@
-"""Time (Eq. 8) and energy (Eq. 9) accounting for one edge round."""
+"""Time (Eq. 8) and energy (Eq. 9) accounting for one edge round.
+
+The communication terms take an optional wire format: with
+``wire_dtype=None`` the classic paper model is used (a theta-compressed
+upload costs ``theta * nu``, i.e. bytes shrink exactly proportionally to
+theta).  With a wire dtype the effective fraction is the EXACT byte ratio
+of the sparse (value, block-local offset) encoding that
+``dist/collectives.wire_encode`` puts on the wire — values + offsets +
+per-block scales over the dense payload — via
+``core.compression.compression_ratio_bytes``, so simulated time/energy
+matches what the gossip path actually ships.
+"""
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.compression import compression_ratio_bytes
+
+
+def wire_fraction(theta, *, wire_dtype=None, wire_block=1024, dense_bits=16):
+    """Fraction of the dense payload a theta-compressed upload occupies."""
+    if wire_dtype is None:
+        return np.asarray(theta, np.float64)
+    return compression_ratio_bytes(theta, wire_dtype=wire_dtype,
+                                   wire_block=wire_block,
+                                   dense_bits=dense_bits)
+
 
 def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
-               gossip=False):
+               gossip=False, wire_dtype=None, wire_block=1024,
+               dense_bits=16):
     """Expected wall time of one edge round.
 
-    Per device: rho*tau*mu + theta*nu; per cluster: max over its devices;
-    round: max over clusters (+ backhaul when a gossip step follows)."""
-    per_dev = rho * tau * mu + theta * nu
+    Per device: rho*tau*mu + eff(theta)*nu; per cluster: max over its
+    devices; round: max over clusters (+ backhaul when a gossip step
+    follows).  ``backhaul`` is the FULL-model inter-cluster transfer time;
+    with a wire format the gossip payload is the wire-encoded intra-mean at
+    the (already quantized) theta level, so it scales by the same effective
+    fraction (of the max level any device ships — lax.switch dispatches on
+    the max, core/round.py)."""
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    per_dev = rho * tau * mu + eff * nu
     m = int(cluster_of.max()) + 1
     per_cluster = np.array([per_dev[cluster_of == i].max() for i in range(m)])
     t = float(per_cluster.max())
     if gossip:
-        t += backhaul
+        t += float(backhaul) * (float(np.max(eff)) if wire_dtype else 1.0)
     return t, per_cluster
 
 
-def round_energy(rho, theta, mu, nu, alpha, p, tau):
+def round_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
+                 wire_block=1024, dense_bits=16):
     """Expected total energy of one edge round (sum over devices)."""
-    return float(np.sum(rho * tau * alpha + p * theta * nu))
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    return float(np.sum(rho * tau * alpha + p * eff * nu))

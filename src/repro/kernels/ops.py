@@ -67,17 +67,24 @@ def ssd(x, dt, A, B, C, *, chunk=64, impl=None):
     return y
 
 
-def topk_compress(x, theta, *, block=1024, impl=None):
-    """x: (R, L); theta: (R,).  Returns (masked, residual)."""
+def topk_compress(x, theta, *, block=1024, impl=None, ef=None):
+    """x: (R, L); theta: (R,); ef: optional (R, L) error-feedback buffer.
+
+    Returns (masked, residual) of Q(x + ef): the EF add is fused into the
+    Pallas kernel (f32 per VMEM tile, no HBM upcast); the jnp/ref oracles
+    add in f32 before masking so all impls agree bit-for-bit.
+    """
     r = _route(impl)
     if r == "pallas":
-        return topk_compress_pallas(x, theta, block=block,
+        return topk_compress_pallas(x, theta, ef=ef, block=block,
                                     interpret=_interp())
-    if r == "ref":
-        masked, _ = ref.topk_mask_exact(x, theta[:, None], block=block)
-        return masked, x - masked
-    masked, _ = ref.topk_mask_bisect_jnp(x, theta[:, None], block=block)
-    return masked, x - masked
+    xf = x.astype(jnp.float32)
+    if ef is not None:
+        xf = xf + ef.astype(jnp.float32)
+    mask_fn = ref.topk_mask_exact if r == "ref" else ref.topk_mask_bisect_jnp
+    masked, _ = mask_fn(xf, theta[:, None], block=block)
+    resid_dtype = x.dtype if ef is None else ef.dtype
+    return masked.astype(x.dtype), (xf - masked).astype(resid_dtype)
 
 
 def rglru(log_a, gated_x, *, h0=None, impl=None):

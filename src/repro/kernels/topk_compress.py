@@ -1,9 +1,13 @@
 """Pallas TPU kernel for the paper's compression operator Q (Sec. 3.2).
 
-Block-local top-k with fused error feedback:
-  input  x = delta + ef            (flat, reshaped to (R, nb, block))
-  output masked  = Q(x)            (kept coordinates, zeros elsewhere)
-  output residual = x - Q(x)       (new error-feedback buffer)
+Block-local top-k with FUSED error feedback:
+  inputs delta (and optionally ef)  (flat, reshaped to (R, nb, block))
+  output masked  = Q(delta + ef)    (kept coordinates, zeros elsewhere)
+  output residual = (delta + ef) - masked   (new error-feedback buffer)
+
+The EF add happens INSIDE the kernel in f32, per VMEM tile: callers pass
+delta/ef in their storage dtype (bf16-native path) and never materialize
+the f32 upcast of a whole model shard in HBM.
 
 The per-block threshold is found by fixed-iteration bisection on the
 magnitude (sort-free: TPU VPU-friendly, no O(block log block) sort).  Each
@@ -26,9 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 BISECT_ITERS = 16
 
 
-def _kernel(theta_ref, x_ref, masked_ref, resid_ref, *, block, rows):
-    x = x_ref[0].astype(jnp.float32)          # (rows, block)
-    theta = theta_ref[0, 0]
+def _mask_tile(x, theta, masked_ref, resid_ref, *, block, rows):
     mag = jnp.abs(x)
     k = jnp.clip(jnp.ceil(theta * block), 1.0, float(block))
     lo = jnp.zeros((rows, 1), jnp.float32)
@@ -58,36 +60,70 @@ def _kernel(theta_ref, x_ref, masked_ref, resid_ref, *, block, rows):
     resid_ref[0] = (x - masked).astype(resid_ref.dtype)
 
 
-def topk_compress_pallas(x, theta, *, block=1024, rows=8, interpret=False):
-    """x: (R, L) with L % block == 0; theta: (R,) in (0, 1].
+def _kernel(theta_ref, x_ref, masked_ref, resid_ref, *, block, rows):
+    _mask_tile(x_ref[0].astype(jnp.float32), theta_ref[0, 0],
+               masked_ref, resid_ref, block=block, rows=rows)
 
-    Returns (masked, residual), both (R, L) with masked + residual == x.
+
+def _kernel_ef(theta_ref, x_ref, ef_ref, masked_ref, resid_ref, *, block,
+               rows):
+    # fused error-feedback add: f32 only inside the VMEM tile
+    x = x_ref[0].astype(jnp.float32) + ef_ref[0].astype(jnp.float32)
+    _mask_tile(x, theta_ref[0, 0], masked_ref, resid_ref, block=block,
+               rows=rows)
+
+
+def _pick_rows(nb: int, rows: int, itemsize: int) -> int:
+    """Largest divisor of nb <= the dtype-native sublane count.
+
+    bf16/int8 tiles want 16/32 sublanes (pallas_guide §Tiling); f32 keeps
+    the historical 8.  Falling back to smaller divisors keeps any nb legal
+    (pallas pads sub-tile shapes, at some efficiency cost).
+    """
+    target = max(rows, (4 * rows) // max(itemsize, 1))
+    rows = min(target, nb)
+    while nb % rows:
+        rows -= 1
+    return rows
+
+
+def topk_compress_pallas(x, theta, *, ef=None, block=1024, rows=8,
+                         interpret=False):
+    """x (and optional ef): (R, L) with L % block == 0; theta: (R,) in
+    (0, 1].
+
+    Returns (masked, residual) with masked + residual == x + ef computed
+    in f32 inside the kernel; masked is cast to x.dtype, residual to
+    ef.dtype (or x.dtype without ef).
     """
     R, L = x.shape
     assert L % block == 0, (L, block)
     nb = L // block
-    rows = min(rows, nb)
-    assert nb % rows == 0, (nb, rows)
+    rows = _pick_rows(nb, rows, jnp.dtype(x.dtype).itemsize)
     xb = x.reshape(R, nb, block)
     theta2 = theta.reshape(R, 1).astype(jnp.float32)
 
-    kern = functools.partial(_kernel, block=block, rows=rows)
+    tile = lambda: pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0))
+    in_specs = [pl.BlockSpec((1, 1), lambda r, i: (r, 0),
+                             memory_space=pltpu.SMEM), tile()]
+    args = [theta2, xb]
+    resid_dtype = x.dtype
+    if ef is None:
+        kern = functools.partial(_kernel, block=block, rows=rows)
+    else:
+        kern = functools.partial(_kernel_ef, block=block, rows=rows)
+        in_specs.append(tile())
+        args.append(ef.reshape(R, nb, block))
+        resid_dtype = ef.dtype
     masked, resid = pl.pallas_call(
         kern,
         grid=(R, nb // rows),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda r, i: (r, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
-            pl.BlockSpec((1, rows, block), lambda r, i: (r, i, 0)),
-        ],
+        in_specs=in_specs,
+        out_specs=[tile(), tile()],
         out_shape=[
             jax.ShapeDtypeStruct((R, nb, block), x.dtype),
-            jax.ShapeDtypeStruct((R, nb, block), x.dtype),
+            jax.ShapeDtypeStruct((R, nb, block), resid_dtype),
         ],
         interpret=interpret,
-    )(theta2, xb)
+    )(*args)
     return masked.reshape(R, L), resid.reshape(R, L)

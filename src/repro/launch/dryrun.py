@@ -3,6 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede every other import (jax locks device count on first init).
 
 import argparse
+import dataclasses
 import json
 import subprocess
 import sys
@@ -19,6 +20,7 @@ from repro.configs.base import ShapeConfig
 from repro.core.round import (FLState, abstract_state, make_prefill_step,
                               make_round_step, make_serve_step)
 from repro.dist.hlo_analysis import (analyze_hlo,
+                                     check_gossip_bytes_scale_with_theta,
                                      check_no_full_leaf_allgather,
                                      sharded_leaf_bytes)
 from repro.dist.policies import Policy, make_serve_policy, make_train_policy
@@ -82,9 +84,12 @@ def _batch_shardings(policy: Policy, batch_abs):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               verbose: bool = True):
+               verbose: bool = True, sparse_gossip: bool = False):
     bundle = get_config(arch)
     cfg = bundle.model
+    hcef = bundle.hcef
+    if sparse_gossip:
+        hcef = dataclasses.replace(hcef, sparse_gossip=True)
     shapes = {s.name: s for s in bundle.shapes}
     shape = shapes[shape_name]
     if shape_name in bundle.skip_shapes:
@@ -107,8 +112,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         topo = bundle.fl_multi if multi_pod else bundle.fl_single
         topo.validate(int(np.prod([mesh.shape[a] for a in dpx])))
         policy = make_train_policy(mesh, topo, dp_axes=dpx)
-        step = make_round_step(cfg, bundle.hcef, topo, policy, gossip=True)
-        state_abs = abstract_state(cfg, bundle.hcef, topo)
+        step = make_round_step(cfg, hcef, topo, policy, gossip=True)
+        state_abs = abstract_state(cfg, hcef, topo)
         state_sh = FLState(
             params=policy.param_shardings(state_abs.params, stacked=True),
             momentum=(policy.param_shardings(state_abs.momentum, stacked=True)
@@ -175,7 +180,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hstats = analyze_hlo(hlo)
     n_chips = int(np.prod(list(mesh.shape.values())))
 
-    agcheck = None
+    agcheck = gossipcheck = None
     if shape.kind == "train":
         # the fused compress+mix path must never re-materialize a
         # model-sharded leaf: no single all-gather the size of a full leaf.
@@ -186,6 +191,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                   f"{agcheck['allgather_max_bytes']:.3e} B >= half the "
                   f"largest model-sharded leaf "
                   f"{agcheck['largest_sharded_leaf_bytes']:.3e} B")
+        if hcef.sparse_gossip:
+            # the static-k lowering contract: the lax.switch branches'
+            # collective-permute payloads must scale with the theta level.
+            gossipcheck = check_gossip_bytes_scale_with_theta(
+                hlo, hcef.theta_levels)
+            if not gossipcheck["ok"]:
+                print(f"WARNING {arch}/{shape_name}: gossip wire bytes do "
+                      f"not scale with theta: {gossipcheck['switches']}")
 
     result = {
         "arch": arch, "shape": shape_name,
@@ -211,6 +224,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if agcheck is not None:
         result["no_full_leaf_allgather"] = agcheck
+    if gossipcheck is not None:
+        result["gossip_bytes_scale_with_theta"] = gossipcheck
     if verbose:
         print(f"== {arch} x {shape_name} x "
               f"{'multi' if multi_pod else 'single'} ==")
@@ -228,13 +243,17 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
-def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path) -> dict:
+def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
+                        sparse_gossip: bool = False) -> dict:
     """Run one cell in an isolated subprocess (memory isolation) + cache."""
-    out = out_dir / f"{arch}.{shape}.{mesh_kind}.json"
+    tag = ".sparse" if sparse_gossip else ""
+    out = out_dir / f"{arch}.{shape}.{mesh_kind}{tag}.json"
     if out.exists():
         return json.loads(out.read_text())
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
            "--shape", shape, "--mesh", mesh_kind, "--out", str(out)]
+    if sparse_gossip:
+        cmd.append("--sparse-gossip")
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
     t0 = time.time()
@@ -255,6 +274,9 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sparse-gossip", action="store_true",
+                    help="lower train cells with HCEFConfig.sparse_gossip "
+                         "and emit the gossip_bytes_scale_with_theta verdict")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -266,7 +288,8 @@ def main():
             for s in bundle.shapes:
                 for mesh_kind in ("single", "multi"):
                     res = run_cell_subprocess(arch, s.name, mesh_kind,
-                                              RESULTS_DIR)
+                                              RESULTS_DIR,
+                                              sparse_gossip=args.sparse_gossip)
                     tag = res["status"]
                     ok += tag == "ok"
                     err += tag == "error"
@@ -276,7 +299,8 @@ def main():
         print(f"TOTAL ok={ok} err={err} skipped={skip}")
         sys.exit(1 if err else 0)
 
-    res = lower_cell(args.arch, args.shape, args.mesh == "multi")
+    res = lower_cell(args.arch, args.shape, args.mesh == "multi",
+                     sparse_gossip=args.sparse_gossip)
     if args.out:
         Path(args.out).write_text(json.dumps(res, indent=1))
 

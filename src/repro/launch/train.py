@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_model
+from repro.core.compression import quantize_theta
 from repro.core.controller import BudgetState
 from repro.core.round import init_state, make_round_step
 from repro.data.synthetic import synthetic_tokens
@@ -44,11 +45,20 @@ def main():
                     choices=["hcef", "cef", "cef_f", "cef_c", "mll_sgd"])
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--sparse-gossip", action="store_true",
+                    help="route gossip through the theta-scaled wire path")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "int8"])
     args = ap.parse_args()
 
     bundle = get_config(args.arch)
     cfg = smoke_model(bundle.model) if args.smoke else bundle.model
     hcef = bundle.hcef
+    if args.sparse_gossip or args.wire_dtype:
+        import dataclasses
+        hcef = dataclasses.replace(
+            hcef, sparse_gossip=hcef.sparse_gossip or args.sparse_gossip,
+            wire_dtype=args.wire_dtype or hcef.wire_dtype)
 
     if args.mesh == "host":
         mesh, policy = None, None
@@ -86,6 +96,11 @@ def main():
             t0 = time.time()
             reports = het.sample_round(rnd)
             rho, theta = controller.controls(reports, budget)
+            if hcef.sparse_gossip:
+                # static-k contract (DESIGN.md §Static-k): the lowered
+                # lax.switch has one branch per theta_level, so the theta
+                # the devices run must be a level — round UP, conservative.
+                theta = quantize_theta(theta, hcef.theta_levels)
             idx = rng.integers(0, corpus.shape[1], (R, b_per_dev))
             batch = {"tokens": jnp.asarray(np.concatenate(
                 [corpus[d, idx[d]] for d in range(R)]))}
@@ -93,13 +108,17 @@ def main():
             fn = step_g if (rnd + 1) % hcef.q == 0 else step_i
             state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
                           jnp.asarray(theta, jnp.float32), keys)
+            # dense_bits=16: het's model_bits above is n_params * 16 (bf16).
+            wire_kw = (dict(wire_dtype=hcef.wire_dtype,
+                            wire_block=hcef.wire_block, dense_bits=16)
+                       if hcef.sparse_gossip else {})
             t, _ = round_time(rho, theta, reports.mu, reports.nu, hcef.tau,
                               np.repeat(np.arange(topo.clusters),
                                         topo.devices_per_cluster),
                               gossip=(rnd + 1) % hcef.q == 0,
-                              backhaul=het.backhaul_time())
+                              backhaul=het.backhaul_time(), **wire_kw)
             e = round_energy(rho, theta, reports.mu, reports.nu,
-                             reports.alpha, reports.p, hcef.tau)
+                             reports.alpha, reports.p, hcef.tau, **wire_kw)
             budget.time_spent_this += t
             budget.energy_spent_this += e
             budget.r += 1

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HCEFConfig
-from repro.core.compression import compress_delta
+from repro.core.compression import compress_delta, quantize_theta
 from repro.core.controller import BudgetState, DeviceReports
 from repro.core.mixing import check_mixing, make_mixing
 from repro.fl.baselines import Controller
@@ -51,6 +51,23 @@ class FedSimConfig:
     seed: int = 0
     estimate_stats: bool = True  # Algorithm 2 exact two-sample estimates
     error_feedback: bool = True
+    # --- sparse gossip wire path (DESIGN.md §Static-k) ---
+    # When enabled, the controller's per-device theta is rounded UP to the
+    # nearest theta_level (the static-k contract the fused round step lowers
+    # one lax.switch branch per level for) and the simulated time/energy use
+    # the wire format's exact byte ratio instead of the ideal theta fraction.
+    sparse_gossip: bool = False
+    theta_levels: tuple = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
+    wire_dtype: str = "f32"  # f32 | bf16 | int8
+    wire_block: int = 1024
+
+    def __post_init__(self):
+        # mirror HCEFConfig's validation so bad wire configs fail at
+        # construction, not rounds later inside compression_ratio_bytes
+        if self.wire_dtype not in ("f32", "bf16", "int8"):
+            raise ValueError(f"wire_dtype {self.wire_dtype!r}")
+        if self.sparse_gossip and not self.theta_levels:
+            raise ValueError("sparse_gossip requires theta_levels")
 
 
 class FedSim:
@@ -178,6 +195,10 @@ class FedSim:
 
         # --- Algorithm 3: coordinator solves P2 ---
         rho, theta = self.controller.controls(reports, self.budget)
+        if cfg.sparse_gossip:
+            # static-k contract: the round step lowers one branch per level,
+            # so the theta the devices actually run must BE a level.
+            theta = quantize_theta(theta, cfg.theta_levels)
 
         # --- local rounds (Eq. 4/6) ---
         keys = jax.random.split(
@@ -201,11 +222,16 @@ class FedSim:
                                       jnp.asarray(gossip))
 
         # --- cost accounting (Eq. 8/9) ---
+        # dense_bits=32: the simulator's params (and HeterogeneityModel's
+        # default model_bits) are f32, so the wire ratio is vs 32-bit entries.
+        wire_kw = (dict(wire_dtype=cfg.wire_dtype, wire_block=cfg.wire_block,
+                        dense_bits=32)
+                   if cfg.sparse_gossip else {})
         t_round, _ = round_time(rho, theta, reports.mu, reports.nu, cfg.tau,
                                 self.cluster_of, gossip=gossip,
-                                backhaul=self.het.backhaul_time())
+                                backhaul=self.het.backhaul_time(), **wire_kw)
         e_round = round_energy(rho, theta, reports.mu, reports.nu,
-                               reports.alpha, reports.p, cfg.tau)
+                               reports.alpha, reports.p, cfg.tau, **wire_kw)
         b = self.budget
         b.time_spent_this += t_round
         b.energy_spent_this += e_round

@@ -7,7 +7,9 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import mixing
-from repro.dist.collectives import mix_local, sparse_neighbor_exchange
+from repro.dist.collectives import (Wire, mix_local,
+                                    sparse_neighbor_exchange, wire_decode,
+                                    wire_encode, wire_k)
 from repro.dist.compat import make_mesh, shard_map
 
 pytestmark = pytest.mark.skipif(
@@ -114,3 +116,163 @@ def test_sparse_exchange_small_k_contracts(rng):
     # self rows' kept mass dominates: correlation with the dense mix high
     cos = (got * want).sum() / (np.linalg.norm(got) * np.linalg.norm(want))
     assert cos > 0.8, cos
+
+
+# ---------------------------------------------------------------------------
+# theta-proportional gossip wire path (DESIGN.md §Static-k)
+# ---------------------------------------------------------------------------
+
+# (C, Dev) pairs exercising layout A (cluster spans g shards), layout B
+# (whole clusters per shard) and R_local > Dev, on both a single replica
+# axis and a pod x data multi-axis mesh.
+WIRE_SHAPES = [(4, 2), (8, 1), (2, 4), (8, 2), (4, 4), (16, 1)]
+MESHES = [((8,), ("data",)), ((4, 2), ("pod", "data"))]
+
+
+@pytest.mark.parametrize("hkind", ["ring", "complete", "erdos_renyi"])
+@pytest.mark.parametrize("C,Dev", WIRE_SHAPES)
+@pytest.mark.parametrize("mesh_shape,axes", MESHES)
+def test_sparse_full_theta_f32_matches_dense_mix(mesh_shape, axes, C, Dev,
+                                                 hkind, rng):
+    """theta = 1 with an f32 wire reproduces the dense mix: bit-for-bit on
+    the single-axis band-rotation paths (identical op order), and to 1-2
+    ulp where the two run DIFFERENT collectives for the same math
+    (``complete``'s psum vs band sum; the multi-axis dense fallback's psum
+    vs the sparse path's structured flat rotations)."""
+    mesh = make_mesh(mesh_shape, axes)
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 96)), jnp.float32)
+    mk = lambda fn: jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=P(axes, None), out_specs=P(axes, None),
+        check_vma=False))
+    dense = mk(lambda xl: mix_local(xl, clusters=C, dev=Dev, axes=axes,
+                                    hkind=hkind))
+    sparse = mk(lambda xl: sparse_neighbor_exchange(
+        xl, clusters=C, dev=Dev, axes=axes, theta=1.0, hkind=hkind,
+        wire_dtype="f32"))
+    got, want = np.asarray(sparse(x)), np.asarray(dense(x))
+    if len(axes) == 1 and hkind != "complete":
+        np.testing.assert_array_equal(got, want)  # bit-for-bit
+    else:
+        np.testing.assert_allclose(got, want, atol=1e-6)
+    # both must equal the dense Appendix-A W operator
+    np.testing.assert_allclose(got, _dense_w(C, Dev, hkind) @ np.asarray(x),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("wire_dtype", ["f32", "bf16", "int8"])
+def test_sparse_wire_dtypes_stay_close(wire_dtype, rng):
+    """Lossy wires only perturb the NEIGHBOR terms: error vs the f32 wire
+    is bounded by the wire's quantization step times the H band mass."""
+    C, Dev, L = 4, 2, 64
+    x = jnp.asarray(rng.normal(size=(C * Dev, L)), jnp.float32)
+    mk = lambda wd: jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(xl, clusters=C, dev=Dev,
+                                            axes=("data",), theta=1.0,
+                                            hkind="ring", wire_dtype=wd),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    ref = np.asarray(mk("f32")(x))
+    got = np.asarray(mk(wire_dtype)(x))
+    scale = np.abs(np.asarray(x)).max()
+    tol = {"f32": 0.0, "bf16": 2.0 ** -8 * scale,
+           "int8": scale / 127.0}[wire_dtype]
+    assert np.abs(got - ref).max() <= tol + 1e-7
+
+
+def test_wire_roundtrip_f32_exact(rng):
+    x = jnp.asarray(rng.normal(size=(3, 200)), jnp.float32)
+    w = wire_encode(x, k_b=64, wire_block=64, wire_dtype="f32")
+    np.testing.assert_array_equal(
+        np.asarray(wire_decode(w, 200, wire_block=64)), np.asarray(x))
+
+
+def test_wire_topk_selection(rng):
+    """k_b < wb keeps exactly the per-block largest-|.| entries."""
+    x = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+    wb, k_b = 32, 4
+    dec = np.asarray(wire_decode(
+        wire_encode(x, k_b=k_b, wire_block=wb, wire_dtype="f32"), 128,
+        wire_block=wb))
+    xb = np.asarray(x).reshape(2, -1, wb)
+    thresh = -np.sort(-np.abs(xb), axis=-1)[..., k_b - 1:k_b]
+    want = np.where(np.abs(xb) >= thresh, xb, 0.0).reshape(2, 128)
+    np.testing.assert_array_equal(dec, want)
+    assert (dec != 0).sum() <= 2 * (128 // wb) * k_b
+
+
+def test_wire_int8_error_bound(rng):
+    """int8 block-scaled dequant error <= scale / (2 * 127) per kept entry
+    (scale = per-block max |kept value|), exactly zero elsewhere."""
+    m, L, wb = 4, 512, 128
+    x = jnp.asarray(rng.normal(size=(m, L)), jnp.float32)
+    k_b = wire_k(0.25, L, wb)
+    ref = np.asarray(wire_decode(
+        wire_encode(x, k_b=k_b, wire_block=wb, wire_dtype="f32"), L,
+        wire_block=wb))
+    w8 = wire_encode(x, k_b=k_b, wire_block=wb, wire_dtype="int8")
+    got = np.asarray(wire_decode(w8, L, wire_block=wb))
+    assert w8.vals.dtype == jnp.int8 and w8.off.dtype == jnp.int16
+    err = np.abs(got - ref).reshape(m, L // wb, wb)
+    bound = np.asarray(w8.scale)[..., None] / (2 * 127.0) + 1e-7
+    assert (err <= bound).all(), float(err.max())
+    # zeros (dropped coordinates) survive the round-trip exactly
+    assert ((ref == 0) <= (got == 0)).all()
+
+
+def test_sparse_multiaxis_misaligned_fallback(rng):
+    """A cluster group that does not divide the innermost axis (C=2, Dev=4
+    on a (4, 2) mesh: g=4 > |data|=2) takes the masked-psum fallback and
+    still computes the exact sparse operator."""
+    mesh = make_mesh((4, 2), ("pod", "data"))
+    C, Dev, L = 2, 4, 64
+    x = jnp.asarray(rng.normal(size=(C * Dev, L)), jnp.float32)
+    f = jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(xl, clusters=C, dev=Dev,
+                                            axes=("pod", "data"), theta=1.0,
+                                            hkind="ring", wire_dtype="f32"),
+        mesh=mesh, in_specs=P(("pod", "data"), None),
+        out_specs=P(("pod", "data"), None), check_vma=False))
+    np.testing.assert_allclose(np.asarray(f(x)),
+                               _dense_w(C, Dev, "ring") @ np.asarray(x),
+                               atol=1e-5)
+
+
+def test_sparse_intra_done_skips_intra_reduction(rng):
+    """intra_done=True on pre-averaged rows gives the same result as the
+    full path on raw rows (the contract the fused round step relies on)."""
+    C, Dev, L = 4, 2, 64
+    x = jnp.asarray(rng.normal(size=(C * Dev, L)), jnp.float32)
+    pre = jax.jit(shard_map(
+        lambda xl: mix_local(xl, clusters=C, dev=Dev, axes=("data",),
+                             hkind="none"),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))(x)
+    mk = lambda intra_done: jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(
+            xl, clusters=C, dev=Dev, axes=("data",), theta=0.25,
+            hkind="ring", intra_done=intra_done),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    np.testing.assert_allclose(np.asarray(mk(True)(pre)),
+                               np.asarray(mk(False)(x)), atol=1e-6)
+
+
+def test_wire_bytes_per_row_matches_cost_model():
+    """The exact-bytes helper and the cost model's bit table describe the
+    SAME wire format — a format change must touch both or this fails."""
+    from repro.core.compression import WIRE_FORMAT_BITS
+    from repro.dist.collectives import wire_bytes_per_row
+    L, wb = 4096, 1024
+    for wd, (vb, ob, sb) in WIRE_FORMAT_BITS.items():
+        for theta in (0.05, 0.25, 1.0):
+            k_b = wire_k(theta, L, wb)
+            want = (L // wb) * (k_b * (vb + ob) + sb) // 8
+            assert wire_bytes_per_row(theta, L, wire_dtype=wd,
+                                      wire_block=wb) == want, (wd, theta)
+
+
+def test_wire_encode_int8_rejects_large_block():
+    with pytest.raises(ValueError, match="32768"):
+        wire_encode(jnp.zeros((1, 1 << 16), jnp.float32), k_b=4,
+                    wire_block=1 << 16, wire_dtype="int8")

@@ -119,3 +119,58 @@ def test_train_policy_topology_tiling():
         make_train_policy(mesh, FLTopology(clusters=3,
                                            devices_per_cluster=1),
                           dp_axes=("data",))
+
+
+def test_sparse_gossip_round_step_hlo_and_equivalence():
+    """sparse_gossip=True: (a) the lowered HLO's lax.switch branches carry
+    collective-permute payloads that scale with the theta level (the
+    static-k contract, DESIGN.md §Static-k); (b) at theta = 1 with the f32
+    wire the sparse round step matches the dense-gossip round step."""
+    import dataclasses
+
+    from repro.dist.hlo_analysis import check_gossip_bytes_scale_with_theta
+
+    cfg, topo, hcef, state, batch, keys = _setup()
+    levels = (0.25, 1.0)
+    hcef_sp = dataclasses.replace(hcef, sparse_gossip=True,
+                                  theta_levels=levels)
+    R = topo.num_devices
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+
+    def sharded(st):
+        shd = policy.param_shardings(st.params, stacked=True)
+        return FLState(
+            params=jax.tree.map(jax.device_put, st.params, shd),
+            momentum=None,
+            ef=jax.tree.map(jax.device_put, st.ef,
+                            policy.param_shardings(st.ef, stacked=True)),
+            round_idx=st.round_idx)
+
+    state_sh = sharded(state)
+    rho = jnp.ones(R)
+    step_sp = jax.jit(make_round_step(cfg, hcef_sp, topo, policy=policy,
+                                      gossip=True))
+    step_dn = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                      gossip=True))
+
+    # (a) wire bytes scale with the quantized theta level
+    theta = jnp.full(R, 0.25)
+    with mesh:
+        hlo = step_sp.lower(state_sh, batch, rho, theta,
+                            keys).compile().as_text()
+    chk = check_gossip_bytes_scale_with_theta(hlo, levels)
+    assert chk["ok"], chk
+
+    # (b) theta = 1 (k = d), f32 wire: sparse == dense gossip round
+    theta1 = jnp.ones(R)
+    with mesh:
+        s_sp, m_sp = step_sp(state_sh, batch, rho, theta1, keys)
+        s_dn, _ = step_dn(sharded(state), batch, rho, theta1, keys)
+    assert float(m_sp["theta_wire"]) == 1.0
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_sp.params)[0],
+            jax.tree_util.tree_flatten_with_path(s_dn.params)[0]):
+        err = float(jnp.abs(jnp.asarray(a, jnp.float32)
+                            - jnp.asarray(b, jnp.float32)).max())
+        assert err < 1e-5, (str(kp), err)
