@@ -146,9 +146,9 @@ def round_step_bench(iters=5):
     rho = jnp.ones(R)
 
     rows = []
-    variants = [("dense", hcef),
-                ("sparse", dataclasses.replace(hcef, sparse_gossip=True,
-                                               theta_levels=levels))]
+    hcef_sp = dataclasses.replace(hcef, sparse_gossip=True,
+                                  theta_levels=levels)
+    variants = [("dense", hcef), ("sparse", hcef_sp)]
     with mesh:
         for name, hc in variants:
             step = jax.jit(make_round_step(cfg, hc, topo, policy=policy,
@@ -159,6 +159,16 @@ def round_step_bench(iters=5):
                             state_sh, iters=iters)
                 rows.append((f"round_{name}_gossip_th{th}", us,
                              f"R{R}_smoke_8dev"))
+        # per-cluster static dispatch (sender-sized payloads, no switch):
+        # one cluster at the min level, one at the max
+        step_pc = jax.jit(make_round_step(
+            cfg, hcef_sp, topo, policy=policy, gossip=True,
+            cluster_levels=(levels[0], levels[-1])))
+        theta = jnp.full(R, levels[0])
+        us = _bench(lambda s: step_pc(s, batch, rho, theta, keys),
+                    state_sh, iters=iters)
+        rows.append((f"round_sparse_pc_gossip_th{levels[0]}-{levels[-1]}",
+                     us, f"R{R}_smoke_8dev"))
     return rows
 
 

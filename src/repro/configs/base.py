@@ -117,6 +117,24 @@ class FLTopology:
                 f"FLTopology {self} covers {tot} dp slots, mesh has {dp_size}")
 
 
+def validate_theta_levels(theta_levels) -> None:
+    """Shared sparse-gossip level-grid contract (HCEFConfig and
+    runtime.driver.FedSimConfig): non-empty, every level in (0, 1], and
+    the largest level exactly covering an uncompressed round —
+    ``quantize_theta`` rounds UP and RAISES out-of-grid, so a grid that
+    stops short of 1.0 cannot represent any controller theta above its
+    max without shipping fewer coordinates than Q kept."""
+    if not theta_levels:
+        raise ValueError("sparse_gossip requires theta_levels")
+    if any(not 0.0 < float(t) <= 1.0 for t in theta_levels):
+        raise ValueError(
+            f"theta_levels must lie in (0, 1], got {theta_levels}")
+    if max(float(t) for t in theta_levels) < 1.0:
+        raise ValueError(
+            f"theta_levels {theta_levels} do not cover [theta_min, 1.0]: "
+            f"the largest level must be 1.0")
+
+
 @dataclass(frozen=True)
 class HCEFConfig:
     """Round structure + controller knobs (paper Sec. 3/5)."""
@@ -150,8 +168,8 @@ class HCEFConfig:
         if self.wire_dtype == "int8" and self.wire_block > 32768:
             raise ValueError(  # int16 block-local offsets wrap past 2^15-1
                 f"int8 wire needs wire_block <= 32768, got {self.wire_block}")
-        if self.sparse_gossip and not self.theta_levels:
-            raise ValueError("sparse_gossip requires theta_levels")
+        if self.sparse_gossip:
+            validate_theta_levels(self.theta_levels)
 
 
 @dataclass(frozen=True)

@@ -126,11 +126,40 @@ def compression_ratio_bytes(theta, *, wire_dtype: str = "f32",
 
 def quantize_theta(theta, levels):
     """Round each theta UP to the nearest level (conservative: the wire
-    never ships fewer coordinates than the controller asked for).  Values
-    above the largest level clamp to it.  numpy in / numpy out — used at
-    the round-step call sites (launch/train.py, runtime/driver.py) so the
-    static-k branch lowered for a level matches the Q the devices ran."""
+    never ships fewer coordinates than the controller asked for).  A theta
+    ABOVE the largest level is an out-of-grid error — clamping it down
+    would silently ship fewer coordinates than Q kept, so the level grid
+    must cover the controller's range (validated at ``HCEFConfig`` /
+    ``FedSimConfig`` construction: ``max(theta_levels) >= 1.0``).  numpy
+    in / numpy out — used at the round-step call sites (launch/train.py,
+    runtime/driver.py) so the static-k branch lowered for a level matches
+    the Q the devices ran."""
     lv = np.sort(np.unique(np.asarray(levels, np.float64)))
-    idx = np.minimum(np.searchsorted(lv, np.asarray(theta, np.float64),
-                                     side="left"), len(lv) - 1)
+    th = np.asarray(theta, np.float64)
+    if np.any(th > lv[-1] + 1e-9):
+        raise ValueError(
+            f"theta {float(np.max(th))} above the largest level "
+            f"{float(lv[-1])}: the theta_levels grid must cover every "
+            f"theta the controller can emit (rounding DOWN would ship "
+            f"fewer coordinates than Q kept)")
+    idx = np.minimum(np.searchsorted(lv, th, side="left"), len(lv) - 1)
     return lv[idx].astype(np.float32)
+
+
+def cluster_levels_from_theta(theta, levels, cluster_of):
+    """Static per-CLUSTER wire levels for the sparse gossip path.
+
+    Quantizes each device's theta UP to the level grid, then takes the max
+    level within each cluster: the cluster's outgoing gossip payload must
+    carry every coordinate any of its members shipped.  Returns a plain
+    tuple of EXACT grid floats (not float32 round-trips — the round-step
+    validates membership in ``theta_levels`` and the call sites key their
+    per-assignment jit cache on the tuple, DESIGN.md §Static-k)."""
+    q = quantize_theta(theta, levels)  # float32, validated in-grid
+    lv = np.sort(np.unique(np.asarray(levels, np.float64)))
+    cl = np.asarray(cluster_of)
+    out = []
+    for c in range(int(cl.max()) + 1):
+        m = np.max(q[cl == c])
+        out.append(float(lv[int(np.argmin(np.abs(lv - m)))]))
+    return tuple(out)

@@ -57,18 +57,30 @@ class BudgetState:
 
 
 def solve_p21_theta(rho, reports: DeviceReports, d_time, d_energy, tau,
-                    theta_min=0.05):
+                    theta_min=0.05, *, return_infeasible: bool = False):
     """Exact LP: maximize sum rho_n theta_n subject to per-device time caps and
-    the coupled energy budget.  Greedy fractional knapsack on rho/(p*nu)."""
+    the coupled energy budget.  Greedy fractional knapsack on rho/(p*nu).
+
+    A device whose raw time cap ``(d_time - rho*tau*mu) / nu`` falls below
+    ``theta_min`` cannot meet the per-round allowance even at minimum
+    communication: the paper's box constraint still forces theta_min (the
+    honest floor — a smaller theta does not exist in P2.1's domain), but
+    silently CLIPPING the cap up would hide that the returned controls
+    violate (15b).  With ``return_infeasible=True`` the per-device
+    violation mask is returned alongside theta so the caller's
+    ``BudgetState`` accounting (and its logs) stay truthful."""
     nu = np.maximum(reports.nu, 1e-12)
-    cap = np.clip((d_time - rho * tau * reports.mu) / nu, theta_min, 1.0)
+    raw_cap = (d_time - rho * tau * reports.mu) / nu
+    infeasible = raw_cap < theta_min - 1e-12
+    cap = np.clip(raw_cap, theta_min, 1.0)
     e_comm_room = d_energy - float(np.sum(rho * tau * reports.alpha))
     cost = reports.p * nu  # joules per unit theta
     base_cost = float(np.sum(cost * theta_min))
     room = e_comm_room - base_cost
     theta = np.full_like(rho, theta_min)
     if room <= 0:
-        return theta  # budget exhausted: minimum communication
+        # budget exhausted: minimum communication
+        return (theta, infeasible) if return_infeasible else theta
     eff = rho / np.maximum(cost, 1e-12)
     order = np.argsort(-eff)
     for n in order:
@@ -80,7 +92,8 @@ def solve_p21_theta(rho, reports: DeviceReports, d_time, d_energy, tau,
             theta[n] = theta_min + room / max(cost[n], 1e-12)
             room = 0.0
             break
-    return np.clip(theta, theta_min, 1.0)
+    theta = np.clip(theta, theta_min, 1.0)
+    return (theta, infeasible) if return_infeasible else theta
 
 
 def solve_p22_rho(theta, reports: DeviceReports, d_time, d_energy, tau,
@@ -128,19 +141,27 @@ def surrogate_value(rho, theta, sigma2, G2):
 def solve_p2(reports: DeviceReports, budget: BudgetState, tau,
              theta_min=0.05, rho_min=0.1, max_iters=8, eps=1e-4,
              fix_rho: Optional[float] = None,
-             fix_theta: Optional[float] = None):
-    """Alternating minimization (Algorithm 3). Returns (rho, theta)."""
+             fix_theta: Optional[float] = None,
+             diagnostics: Optional[dict] = None):
+    """Alternating minimization (Algorithm 3). Returns (rho, theta).
+
+    ``diagnostics``: optional dict filled in place with solver honesty
+    flags — currently ``p21_time_infeasible``, the (N,) mask of devices
+    whose theta_min floor already violates the per-round time allowance
+    (the returned controls then exceed (15b); see ``solve_p21_theta``)."""
     N = len(reports.mu)
     d_time, d_energy = budget.allowances()
     s2 = float(np.mean(reports.sigma2))
     G2 = float(np.mean(reports.G2))
     rho = np.full(N, fix_rho if fix_rho is not None else 1.0)
     theta = np.full(N, fix_theta if fix_theta is not None else 1.0)
+    infeasible = np.zeros(N, bool)
     prev = None
     for _ in range(max_iters):
         if fix_theta is None:
-            theta = solve_p21_theta(rho, reports, d_time, d_energy, tau,
-                                    theta_min)
+            theta, infeasible = solve_p21_theta(
+                rho, reports, d_time, d_energy, tau, theta_min,
+                return_infeasible=True)
         if fix_rho is None:
             rho = solve_p22_rho(theta, reports, d_time, d_energy, tau,
                                 rho_min)
@@ -148,4 +169,12 @@ def solve_p2(reports: DeviceReports, budget: BudgetState, tau,
         if prev is not None and np.max(np.abs(z - prev)) < eps:
             break
         prev = z
+    if fix_theta is not None:
+        # the fixed theta never went through P2.1: flag devices whose
+        # fixed communication already breaks the time allowance.
+        nu = np.maximum(reports.nu, 1e-12)
+        infeasible = (rho * tau * reports.mu + theta * nu
+                      > d_time + 1e-9)
+    if diagnostics is not None:
+        diagnostics["p21_time_infeasible"] = infeasible
     return rho, theta

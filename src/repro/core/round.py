@@ -73,17 +73,45 @@ def _split_batch(batch: Dict[str, jnp.ndarray], R: int, tau: int):
 
 
 def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
-                    policy=None, *, gossip: bool = True, impl=None):
+                    policy=None, *, gossip: bool = True, impl=None,
+                    cluster_levels=None):
     """Returns round_step(state, batch, rho, theta, keys) -> (state, metrics).
 
     batch: dict of (global_batch, ...) arrays; rho/theta: (R,) controls;
     keys: (R, 2) uint32 per-device PRNG keys.
     ``gossip`` statically selects whether the inter-cluster mixing (Eq. 5)
     runs at the end of the round (the driver uses it every q-th edge round).
+    ``cluster_levels``: optional STATIC per-cluster theta levels (length
+    ``topo.clusters``, each a ``hcef.theta_levels`` entry) for the sparse
+    gossip path — each cluster's outgoing band payload is then sized by
+    its OWN level (sender-sized edges, Algorithm 3's heterogeneous
+    ratios) instead of one global ``max(theta)`` switch.  The assignment
+    is static per lowered program; call sites compute it on the host from
+    the quantized theta (``core.compression.cluster_levels_from_theta``)
+    and jit-cache one step per distinct assignment (DESIGN.md §Static-k).
+    Requires ``hcef.sparse_gossip`` and a mesh policy (fails loudly
+    otherwise — a silently ignored level assignment would un-FL the run).
     """
     model = get_model(cfg)
     C, Dev = topo.clusters, topo.devices_per_cluster
     R = topo.num_devices
+    if cluster_levels is not None:
+        if not (hcef.sparse_gossip and gossip):
+            raise ValueError("cluster_levels requires sparse_gossip and a "
+                             "gossip round step")
+        if policy is None or policy.mesh is None:
+            raise ValueError("cluster_levels requires a mesh policy (the "
+                             "non-fused path has no wire)")
+        cluster_levels = tuple(float(t) for t in cluster_levels)
+        if len(cluster_levels) != C:
+            raise ValueError(f"cluster_levels has {len(cluster_levels)} "
+                             f"entries for {C} clusters")
+        grid = {float(t) for t in hcef.theta_levels}
+        bad = [t for t in cluster_levels if t not in grid]
+        if bad:
+            raise ValueError(f"cluster_levels {bad} not in theta_levels "
+                             f"{sorted(grid)} (the static-k contract only "
+                             f"lowers grid levels)")
     H_np = mixing.make_mixing(topo.backhaul, C)
     # Paper Appendix A: the whole aggregation (intra-cluster averaging +
     # gossip + broadcast-back) is one linear operator on the device dim,
@@ -214,7 +242,31 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             new_flat = [p for p, _ in outs]
             ef = treedef.unflatten([r for _, r in outs])
 
-            if sparse:
+            if sparse and cluster_levels is not None:
+                # Per-CLUSTER static dispatch: one program per distinct
+                # (cluster -> level) assignment (the call site jit-caches
+                # them); every cluster's outgoing band payload is sized
+                # by its own level via partial-perm level groups inside
+                # sparse_neighbor_exchange — no switch, no dead branches.
+                def gossip_leaf_pc(ml, spec):
+                    def local_g(ms):
+                        return sparse_neighbor_exchange(
+                            ms, clusters=C, dev=Dev, axes=rep_axes,
+                            cluster_theta=cluster_levels, hkind=hkind,
+                            wire_dtype=hcef.wire_dtype,
+                            wire_block=hcef.wire_block, intra_done=True)
+
+                    return shard_map(local_g, mesh=mesh, in_specs=(spec,),
+                                     out_specs=spec, check_vma=False)(ml)
+
+                new_flat = [gossip_leaf_pc(m, s)
+                            for m, s in zip(new_flat, flat_s)]
+                metrics["theta_wire"] = jnp.float32(max(cluster_levels))
+            elif sparse:
+                # Fallback for callers that only pass a traced theta: a
+                # lax.switch over the level grid dispatched on the GLOBAL
+                # max (uniform — every cluster ships at the ceiling;
+                # per-cluster savings need the static assignment above).
                 levels = tuple(sorted({float(t)
                                        for t in hcef.theta_levels}))
                 lv = jnp.asarray(levels, jnp.float32)

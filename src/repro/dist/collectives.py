@@ -26,8 +26,14 @@ theta instead of the dense model size (Li et al., arXiv:2012.11804).  The
 compact representation is BLOCK-LOCAL (DESIGN.md §Static-k): each
 ``wire_block``-sized slab of the flattened row keeps its own k_b largest
 entries, so indices are block-local offsets (int16-packable) and the block
-id is implicit from position.  ``wire_encode`` / ``wire_decode`` implement
-the three wire dtypes:
+id is implicit from position.  Wire levels can be PER-CLUSTER
+(``cluster_theta``): senders are grouped by encode shape and each group
+rotates over a partial ppermute covering only its own edges, so total
+gossip bytes track the level-vector sum (Algorithm 3's heterogeneous
+ratios) instead of R * max(level); any level whose encoding would reach
+dense-row bytes ships the dense row instead (``wire_ships_dense`` — the
+wire never costs more than the dense mix).  ``wire_encode`` /
+``wire_decode`` implement the three wire dtypes:
 
     f32   values f32, offsets int32           (8   B / kept entry)
     bf16  values bf16, offsets int32          (6   B / kept entry)
@@ -91,11 +97,24 @@ def _flat_shard_index(axes: tuple):
     return idx
 
 
-def _rotate(tree, axis: str, shift: int, n: int):
-    """value of shard (i - shift) % n lands on shard i, for every leaf."""
-    if shift % n == 0:
+def _rotate(tree, axis: str, shift: int, n: int, src=None):
+    """value of shard (i - shift) % n lands on shard i, for every leaf.
+
+    ``src``: optional static collection of SOURCE shard indices allowed to
+    send (a PARTIAL permutation — the per-cluster wire-level groups of
+    ``sparse_neighbor_exchange``).  Shards that are no pair's destination
+    receive ppermute's zero-fill, so filtered-out contributions vanish
+    without any masking flop.  ``src=None`` keeps the full rotation (and
+    the shift-0 no-op shortcut; with a filter even shift 0 must run so
+    non-member rows are zeroed).
+    """
+    if shift % n == 0 and src is None:
         return tree
-    perm = [(j, (j + shift) % n) for j in range(n)]
+    srcset = None if src is None else frozenset(src)
+    perm = [(j, (j + shift) % n) for j in range(n)
+            if srcset is None or j in srcset]
+    if not perm:
+        return jax.tree.map(jnp.zeros_like, tree)
     return jax.tree.map(lambda x: jax.lax.ppermute(x, axis, perm), tree)
 
 
@@ -344,6 +363,61 @@ def wire_bytes_per_row(theta: float, L: int, *, wire_dtype: str = "f32",
     return nb * (k_b * (val_b + off_b) + scale_b)
 
 
+def wire_ships_dense(theta: float, L: int, *, wire_dtype: str = "f32",
+                     wire_block: int = 1024, dense_itemsize: int = 2) -> bool:
+    """True when the sparse (value, offset) encoding would occupy at least
+    the dense row at ``dense_itemsize`` bytes/entry — the level then takes
+    the DENSE-WIRE FALLBACK: the row crosses the backhaul uncompressed in
+    the delta's storage dtype (exactly what the dense mix would ship), so
+    the wire never costs more than dense.  With an f32 wire over bf16
+    entries that is every theta >= ~dense_itemsize/8 (the offsets alone
+    double the payload at theta = 1)."""
+    return _wire_plan_key(theta, L, wire_block, wire_dtype,
+                          int(dense_itemsize)) == ("dense",)
+
+
+def _wire_plan_key_from_kb(k_b: int, L: int, wire_block: int,
+                           wire_dtype: str, dense_itemsize: int):
+    """Static encode descriptor for a per-block budget k_b: ("dense",)
+    when the encoding would reach the dense row, else ("wire", k_b)."""
+    wb = _wire_block_of(L, wire_block)
+    nb = -(-L // wb)
+    val_b, off_b, scale_b = {"f32": (4, 4, 0), "bf16": (2, 4, 0),
+                             "int8": (1, 2, 4)}[wire_dtype]
+    if nb * (k_b * (val_b + off_b) + scale_b) >= L * int(dense_itemsize):
+        return ("dense",)
+    return ("wire", k_b)
+
+
+def _wire_plan_key(level: float, L: int, wire_block: int, wire_dtype: str,
+                   dense_itemsize: int):
+    """Static encode descriptor for one theta level."""
+    return _wire_plan_key_from_kb(wire_k(level, L, wire_block), L,
+                                  wire_block, wire_dtype, dense_itemsize)
+
+
+def _wire_plans(sender_levels, L: int, wire_block: int, wire_dtype: str,
+                dense_itemsize: int):
+    """Group senders by their static encode key -> [(key, src | None)].
+
+    ``sender_levels``: per-SENDER theta levels (one per shard for the
+    structured mesh layouts, one per cluster row off-mesh).  Senders that
+    share a key share one payload + one (possibly partial) rotation;
+    ``src`` is None when a single key covers every sender (the uniform
+    fast path — full rotation, no filtering)."""
+    groups: dict = {}
+    for s, lvl in enumerate(sender_levels):
+        key = _wire_plan_key(float(lvl), L, wire_block, wire_dtype,
+                             dense_itemsize)
+        groups.setdefault(key, []).append(s)
+    plans = []
+    for key in sorted(groups):
+        src = groups[key]
+        plans.append((key, None if len(src) == len(sender_levels)
+                      else frozenset(src)))
+    return plans
+
+
 def wire_encode(rows, k_b: int, *, wire_block: int = 1024,
                 wire_dtype: str = "f32") -> Wire:
     """rows: (m, L) f32 -> block-local top-k_b Wire (static shapes).
@@ -396,9 +470,26 @@ def wire_decode(wire: Wire, L: int, *, wire_block: int = 1024):
 # sparse neighbor exchange
 # ---------------------------------------------------------------------------
 
+def _roll_rows(C):
+    """Off-mesh rotate: roll rows, zeroing rows whose SOURCE row is outside
+    the plan's sender set (mirrors ppermute's zero-fill for partial perms,
+    so the off-mesh path computes the exact same operator)."""
+    def rot(tree, o, src=None):
+        rolled = jax.tree.map(lambda v: jnp.roll(v, o, axis=0), tree)
+        if src is None:
+            return rolled
+        keep = jnp.asarray(np.isin((np.arange(C) - o) % C,
+                                   sorted(src)))
+        return jax.tree.map(
+            lambda v: jnp.where(keep.reshape((C,) + (1,) * (v.ndim - 1)),
+                                v, jnp.zeros_like(v)), rolled)
+    return rot
+
+
 def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                              k: Optional[int] = None,
                              theta: Optional[float] = None,
+                             cluster_theta=None,
                              hkind: str = "ring",
                              p_edge: float = 0.4, seed: int = 0,
                              wire_dtype: str = "f32",
@@ -411,15 +502,32 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     ``wire_encode``); the ppermute band rotations of ``mix_local`` then
     move ONLY the compact representation instead of the dense d entries,
     so gossip bytes scale with theta = k/d.  The self term uses the
-    uncompressed local mean (it never crosses the wire), so k = d with an
-    f32 wire reproduces the dense mix exactly.
+    uncompressed local mean (it never crosses the wire).  A level whose
+    encoded bytes would reach the dense row (``wire_ships_dense``, e.g.
+    theta = 1 where offsets would 2x the payload) ships the dense row in
+    the delta's storage dtype instead — the wire never costs more than
+    the dense mix, and theta = 1 with an f32 input is bit-for-bit dense.
 
-    ``k``: global per-row coordinate budget, or ``theta``: the compression
-    level directly (exactly one must be given; both are STATIC — the
-    caller lowers one program per quantized theta level, DESIGN.md
-    §Static-k).  ``intra_done=True`` asserts the rows are already
-    intra-cluster means (replicated within each cluster, e.g. the output
-    of ``mix_local(..., hkind="none")``): the intra reduction is then
+    Exactly one of the three STATIC level arguments must be given
+    (DESIGN.md §Static-k — the caller lowers one program per assignment):
+      ``k``: global per-row coordinate budget (uniform);
+      ``theta``: one compression level for every cluster (uniform);
+      ``cluster_theta``: a length-``clusters`` sequence of PER-CLUSTER
+        levels — each cluster's outgoing band payload is sized by its OWN
+        level (sender-sized edges).  Senders are grouped by their encode
+        shape and each group's rotation is a PARTIAL ppermute covering
+        only that group's edges (non-destinations receive zeros, which
+        decode to zero contributions), so total gossip bytes track the
+        level-vector sum instead of R * max(level).  Granularity is the
+        sending SHARD: exact per-cluster for layout A (one cluster per
+        shard group); layout B escalates each shard's clusters to the
+        shard's max level.  Multi-axis replica dims cannot sender-filter
+        the relayed flat rotations and conservatively collapse to the max
+        level (documented wire-savings loss, math unchanged).
+
+    ``intra_done=True`` asserts the rows are already intra-cluster means
+    (replicated within each cluster, e.g. the output of
+    ``mix_local(..., hkind="none")``): the intra reduction is then
     skipped, so the only collectives are the theta-scaled band rotations.
 
     Multi-axis replica dims lower to flat-index rotations
@@ -438,23 +546,54 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
 
     dims = delta.shape[1:]
     L = int(np.prod(dims)) if dims else 1
-    if (k is None) == (theta is None):
-        raise ValueError("pass exactly one of k= / theta=")
+    if (k is None) + (theta is None) + (cluster_theta is None) != 2:
+        raise ValueError("pass exactly one of k= / theta= / cluster_theta=")
+    if cluster_theta is not None:
+        cluster_theta = tuple(float(t) for t in cluster_theta)
+        if len(cluster_theta) != C:
+            raise ValueError(
+                f"cluster_theta has {len(cluster_theta)} entries for "
+                f"{C} clusters")
+        if len(axes) > 1:
+            # the relayed multi-axis flat rotations cannot filter by the
+            # ORIGINAL sender, so per-cluster payloads would corrupt the
+            # q/q+1 stitching — collapse to the max level (conservative:
+            # never ships fewer coordinates than any cluster's Q kept).
+            theta, cluster_theta = max(cluster_theta), None
+        elif len(set(cluster_theta)) == 1:
+            theta, cluster_theta = cluster_theta[0], None
     wb = _wire_block_of(L, wire_block)
+    dense_itemsize = delta.dtype.itemsize
+    plan_kw = dict(L=L, wire_block=wire_block, wire_dtype=wire_dtype,
+                   dense_itemsize=dense_itemsize)
+    plans = None  # per-cluster paths compute layout-specific plans below
     if theta is not None:
-        k_b = wire_k(theta, L, wire_block)
-    else:
+        plans = _wire_plans((theta,), **plan_kw)
+    elif k is not None:
         k_b = max(1, min(wb, int(np.ceil(int(k) * wb / L))))
-    wire_kw = dict(k_b=k_b, wb=wb, wire_dtype=wire_dtype)
+        plans = [(_wire_plan_key_from_kb(k_b, L, wire_block, wire_dtype,
+                                         dense_itemsize), None)]
+    if (plans is not None and len(plans) == 1 and plans[0] == (("dense",),
+                                                               None)
+            and not intra_done):
+        # Uniform dense fallback end-to-end IS the dense banded mix:
+        # delegate so theta = 1 is bit-for-bit identical to ``mix_local``
+        # (and ships exactly its bytes).  intra_done rows keep the group
+        # machinery (mix_local would re-run the intra reduction).
+        return mix_local(delta, clusters=C, dev=Dev, axes=axes, hkind=hkind,
+                         p_edge=p_edge, seed=seed)
+    wire_kw = dict(wb=wb, wire_dtype=wire_dtype,
+                   dense_dtype=delta.dtype)
     f32 = delta.astype(jnp.float32)
 
     if not axes:
         xb = f32.reshape((C, Dev) + dims)
         means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(C, L)
+        if cluster_theta is not None:
+            plans = _wire_plans(cluster_theta, **plan_kw)
         y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind,
-                             p_edge, seed, rotate=lambda t, o:
-                             jax.tree.map(lambda v: jnp.roll(v, o, axis=0),
-                                          t), **wire_kw)
+                             p_edge, seed, rotate=_roll_rows(C),
+                             plans=plans, **wire_kw)
         y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
 
@@ -477,13 +616,25 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                     s = _group_allreduce_sum(s, axes[-1], sizes[-1], g)
                 mean = (s / Dev)[None]
             cl = (_flat_shard_index(axes) // g)[None]
-            rot = lambda t, o: _rotate_flat(t, axes, o * g, sizes)
+            if cluster_theta is not None:
+                # sender shard j belongs to cluster j // g: exact
+                # per-cluster wire levels (single axis guaranteed here).
+                plans = _wire_plans([cluster_theta[j // g]
+                                     for j in range(n)], **plan_kw)
+
+            def rot(t, o, src=None):
+                if src is None:
+                    return _rotate_flat(t, axes, o * g, sizes)
+                return _rotate(t, axes[0], o * g, n, src=src)
+
             y = _sparse_mix_rows(mean, mean, cl, C, hkind, p_edge, seed,
-                                 rot, **wire_kw)
+                                 rot, plans=plans, **wire_kw)
             y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
             return y.astype(delta.dtype)
         return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
-                                hkind, p_edge, seed,
+                                hkind, p_edge, seed, plans=plans,
+                                cluster_theta=cluster_theta,
+                                plan_kw=plan_kw,
                                 **wire_kw).reshape(delta.shape).astype(
                                     delta.dtype)
 
@@ -493,30 +644,41 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
         xb = f32.reshape((Cl, Dev) + dims)
         means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(Cl, L)
         cl = _flat_shard_index(axes) * Cl + jnp.arange(Cl)
+        if cluster_theta is not None:
+            # one payload per shard carries Cl rows -> sender granularity
+            # is the SHARD: escalate to the max level among its clusters.
+            plans = _wire_plans(
+                [max(cluster_theta[j * Cl:(j + 1) * Cl])
+                 for j in range(n)], **plan_kw)
 
-        def rot(tree, o):
+        def rot(tree, o, src=None):
             q, rm = divmod(o, Cl)
-            r_q = _rotate_flat(tree, axes, q, sizes)
+            r1 = (lambda t, s: _rotate_flat(t, axes, s, sizes)) \
+                if src is None else \
+                (lambda t, s: _rotate(t, axes[0], s, n, src=src))
+            r_q = r1(tree, q)
             if rm == 0:
                 return r_q
-            r_q1 = _rotate_flat(tree, axes, q + 1, sizes)
+            r_q1 = r1(tree, q + 1)
             return jax.tree.map(
                 lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]],
                                              axis=0), r_q1, r_q)
 
         y = _sparse_mix_rows(means, means, cl, C, hkind, p_edge, seed, rot,
-                             **wire_kw)
+                             plans=plans, **wire_kw)
         y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
 
     return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
-                            p_edge, seed,
+                            p_edge, seed, plans=plans,
+                            cluster_theta=cluster_theta, plan_kw=plan_kw,
                             **wire_kw).reshape(delta.shape).astype(
                                 delta.dtype)
 
 
 def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
-                     *, k_b, wb, wire_dtype):
+                     *, plans, wb, wire_dtype, dense_dtype,
+                     cluster_theta=None, plan_kw=None):
     """Misaligned (C, Dev) layouts: masked psum of the dense cluster means,
     then the sparse operator applied LOCALLY (encode/decode round-trip on
     the neighbor terms).  Math identical to the structured paths; wire
@@ -531,26 +693,44 @@ def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
     part = jnp.tensordot(onehot, f32_rows, axes=(0, 0))
     sums = jax.lax.psum(part, axes)  # (C, L) cluster sums (or Dev * mean)
     means = sums / Dev
+    if cluster_theta is not None:
+        plans = _wire_plans(cluster_theta, **plan_kw)
     y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind, p_edge,
-                         seed, rotate=lambda t, o: jax.tree.map(
-                             lambda v: jnp.roll(v, o, axis=0), t),
-                         k_b=k_b, wb=wb, wire_dtype=wire_dtype)
+                         seed, rotate=_roll_rows(C), plans=plans,
+                         wb=wb, wire_dtype=wire_dtype,
+                         dense_dtype=dense_dtype)
     return jnp.take(y, cl, axis=0)
 
 
 def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
-                     rotate, *, k_b, wb, wire_dtype):
-    """Shared core: wire-encode rows, rotate the Wire per band, decode.
+                     rotate, *, plans, wb, wire_dtype, dense_dtype):
+    """Shared core: encode rows per wire plan, rotate each plan's payload
+    per band (partial perms for per-cluster level groups), decode, sum.
 
     means/self_dense: (m, L) cluster means (compressed vs self term);
-    rotate(tree, o) returns the band-o rotated pytree of row arrays.
+    rotate(tree, o, src) returns the band-o rotated pytree of row arrays,
+    shipping only from the static sender set ``src`` (None = all);
+    plans: [(("wire", k_b) | ("dense",), src)] from ``_wire_plans`` — a
+    ("dense",) plan ships the rows uncompressed in ``dense_dtype``.
     """
     m, L = means.shape
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
-    wire = wire_encode(means, k_b, wire_block=wb, wire_dtype=wire_dtype)
+    payloads = []
+    for key, src in plans:
+        if key[0] == "dense":
+            payloads.append(((means.astype(dense_dtype),), None, src))
+        else:
+            payloads.append((tuple(wire_encode(
+                means, key[1], wire_block=wb, wire_dtype=wire_dtype)),
+                key[1], src))
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
     y = take(diag)[:, None] * self_dense
     for o, coef in sorted(bands.items()):
-        r_wire = Wire(*rotate(tuple(wire), o))
-        y = y + take(coef)[:, None] * wire_decode(r_wire, L, wire_block=wb)
+        for payload, k_b, src in payloads:
+            moved = rotate(payload, o, src)
+            if k_b is None:
+                dec = moved[0].astype(jnp.float32)
+            else:
+                dec = wire_decode(Wire(*moved), L, wire_block=wb)
+            y = y + take(coef)[:, None] * dec
     return y

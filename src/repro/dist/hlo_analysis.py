@@ -13,9 +13,13 @@ Returned dict keys:
   dot_bytes        operand+result bytes of dots (weighted)
   coll_total       total collective bytes (weighted, result-shape based)
   coll:<op>        per-op collective bytes (all-reduce, all-gather, ...)
-  gossip_wire_bytes     collective-permute payload bytes (weighted) — the
-                        gossip/backhaul wire traffic of the dist layer's
-                        ppermute band rotations (DESIGN.md §Static-k)
+  gossip_wire_bytes     collective-permute payload bytes, weighted AND
+                        multiplied by each permute's source_target_pairs
+                        count (fleet-total wire traffic) — the
+                        gossip/backhaul bytes of the dist layer's band
+                        rotations.  Pair-weighting is what charges the
+                        PARTIAL perms of the per-cluster level groups by
+                        their actual edges (DESIGN.md §Static-k).
   allgather_max_bytes   LARGEST single all-gather result (unweighted) —
                         the "did we gather a full model leaf?" detector
 """
@@ -40,6 +44,18 @@ _CALLED_RE = re.compile(
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute", "collective-broadcast")
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def _permute_pairs(line: str) -> int:
+    """Number of source_target_pairs of a collective-permute line — the
+    fleet-total bytes are pairs * per-device payload (a full rotation has
+    n pairs; the per-cluster level groups ship PARTIAL perms)."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return 1
+    return m.group(1).count("{")
 
 
 def _shape_bytes(shape_str: str) -> int:
@@ -180,6 +196,9 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
                 stats["coll_total"] += weight * rbytes
                 if base == "all-gather":
                     allgather_max = max(allgather_max, rbytes)
+                if base == "collective-permute":
+                    stats["gossip_wire_bytes"] += (
+                        weight * rbytes * _permute_pairs(line))
             called = _called_computations(line)
             if " while(" in line:
                 body = cond = None
@@ -202,8 +221,9 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
     # ppermute payloads ARE the gossip/backhaul wire bytes: the dist layer
     # lowers intra-cluster reductions and band rotations to
     # collective-permute, and the sparse wire path's whole point is that
-    # these bytes scale with theta (checked below).
-    stats["gossip_wire_bytes"] = stats.get("coll:collective-permute", 0.0)
+    # these (pair-weighted, accumulated in visit above) bytes scale with
+    # the theta level vector (checked below).
+    stats.setdefault("gossip_wire_bytes", 0.0)
     stats["allgather_max_bytes"] = allgather_max
     return dict(stats)
 
@@ -233,8 +253,10 @@ def sharded_leaf_bytes(abstract_tree, sharding_tree) -> List[float]:
 
 def _permute_bytes_in(comps: Dict[str, List[str]], name: str,
                       depth: int = 0) -> float:
-    """Total collective-permute payload bytes reachable from computation
-    ``name`` (branch bodies have no scanned loops; plain recursion)."""
+    """Total pair-weighted collective-permute payload bytes reachable from
+    computation ``name`` (branch bodies have no scanned loops; plain
+    recursion).  Pair-weighting (bytes * source_target_pairs) charges the
+    per-cluster level groups' PARTIAL perms by their actual edge count."""
     if name not in comps or depth > 64:
         return 0.0
     total = 0.0
@@ -242,30 +264,52 @@ def _permute_bytes_in(comps: Dict[str, List[str]], name: str,
         op, rbytes, _, _ = _instr_stats(line)
         base = op.removesuffix("-start").removesuffix("-done")
         if base == "collective-permute" and not op.endswith("-done"):
-            total += rbytes
+            total += rbytes * _permute_pairs(line)
         for c in _called_computations(line):
             total += _permute_bytes_in(comps, c, depth + 1)
     return total
 
 
+def _expected_wire_bytes(level: float, *, wire_dtype: str, wire_block: int,
+                         dense_itemsize: int) -> float:
+    """Nominal bytes one wire_block-sized row ships at ``level`` — the
+    sparse encoding, capped by the dense fallback (the wire ships the
+    dense row in the storage dtype once the encoding would cost more,
+    dist/collectives.wire_ships_dense)."""
+    from repro.dist.collectives import wire_bytes_per_row
+    return min(wire_bytes_per_row(level, wire_block, wire_dtype=wire_dtype,
+                                  wire_block=wire_block),
+               wire_block * dense_itemsize)
+
+
 def check_gossip_bytes_scale_with_theta(
-        hlo: str, theta_levels, *, slack: float = 2.0) -> Dict[str, object]:
+        hlo: str, theta_levels, *, slack: float = 2.0,
+        wire_dtype: str = "f32", wire_block: int = 1024,
+        dense_itemsize: int = 2) -> Dict[str, object]:
     """Verify the static-k lowering: the round step's ``lax.switch`` over
     ``theta_levels`` must lower to conditionals whose branch payloads (the
-    gossip band-rotation collective-permutes) grow with the level.
+    gossip band-rotation collective-permutes) track the level's EXPECTED
+    wire bytes — the sparse encoding capped by the dense fallback
+    (``dense_itemsize`` is the storage dtype's bytes/entry, e.g. 2 for
+    bf16 params).
 
     Checks every ``conditional`` with len(theta_levels) branch computations
     that contains any collective-permute (lax.switch branch order is the
     level order).  ok iff at least one such conditional exists, every
     branch gossips (> 0 permute bytes), bytes are nondecreasing in the
-    level, and the smallest level's bytes are within ``slack`` of the
-    proportional share (bytes_min / bytes_max <= slack * k_min / k_max) —
-    i.e. the branches really ship the 2k-entry compact representation, not
-    a dense payload plus a theta-sized rider.
+    level (expected bytes are — the dense cap saturates, it never dips),
+    and the smallest level's bytes are within ``slack`` of its expected
+    share (bytes_min / bytes_max <= slack * expected_min / expected_max) —
+    i.e. the branches really ship the compact representation, not a dense
+    payload plus a theta-sized rider.
     """
     # dedupe to match core/round.py's lowering (one branch per UNIQUE level)
     levels = sorted({float(t) for t in theta_levels})
     N = len(levels)
+    expected = [_expected_wire_bytes(l, wire_dtype=wire_dtype,
+                                     wire_block=wire_block,
+                                     dense_itemsize=dense_itemsize)
+                for l in levels]
     comps = _split_computations(hlo)
     checked = []
     ok = True
@@ -280,8 +324,7 @@ def check_gossip_bytes_scale_with_theta(
             if not any(per_branch):
                 continue  # a non-gossip switch (none in practice)
             mono = all(a <= b for a, b in zip(per_branch, per_branch[1:]))
-            # k = ceil(level * wire_block) -> proportional byte share
-            share = max(levels[0] / levels[-1], 1e-9)
+            share = max(expected[0] / expected[-1], 1e-9)
             prop = (per_branch[0] > 0
                     and per_branch[0] <= slack * share * per_branch[-1])
             ok = ok and mono and prop
@@ -290,7 +333,48 @@ def check_gossip_bytes_scale_with_theta(
     if not checked:
         ok = False
     return {"ok": ok, "n_switches": len(checked), "levels": levels,
-            "switches": checked}
+            "expected_bytes_per_row": expected, "switches": checked}
+
+
+def check_cluster_gossip_bytes(
+        hlo: str, baseline_hlo: str, cluster_levels, *,
+        wire_dtype: str = "f32", wire_block: int = 1024,
+        dense_itemsize: int = 2, slack: float = 2.0,
+        intra_hlo: str = None) -> Dict[str, object]:
+    """Verify the PER-CLUSTER static-k lowering (no switch — one program
+    per assignment): total pair-weighted collective-permute bytes of the
+    heterogeneous program must track the LEVEL-VECTOR sum, not
+    R * max(level).
+
+    hlo: the round step lowered at the heterogeneous ``cluster_levels``
+    assignment; baseline_hlo: the same step at all-max(cluster_levels);
+    intra_hlo: optionally the gossip=False lowering — its permutes are the
+    level-INDEPENDENT intra-cluster traffic, subtracted from both so the
+    share comparison sees only gossip bytes.
+
+    ok iff the heterogeneous total is strictly below the baseline and the
+    gossip portion is within ``slack`` (both ways) of the level-vector
+    proportional share sum(expected(level_c)) / (C * expected(max)).
+    """
+    levels = [float(t) for t in cluster_levels]
+    lmax = max(levels)
+    exp = lambda l: _expected_wire_bytes(l, wire_dtype=wire_dtype,
+                                         wire_block=wire_block,
+                                         dense_itemsize=dense_itemsize)
+    share = sum(exp(l) for l in levels) / (len(levels) * exp(lmax))
+    got = analyze_hlo(hlo)["gossip_wire_bytes"]
+    base = analyze_hlo(baseline_hlo)["gossip_wire_bytes"]
+    intra = (analyze_hlo(intra_hlo)["gossip_wire_bytes"]
+             if intra_hlo is not None else 0.0)
+    g_got, g_base = got - intra, base - intra
+    ok = (got < base and g_base > 0 and g_got > 0
+          and g_got <= slack * share * g_base
+          and g_got >= share * g_base / slack)
+    return {"ok": ok, "cluster_levels": levels, "share": share,
+            "permute_bytes": got, "baseline_permute_bytes": base,
+            "intra_permute_bytes": intra,
+            "gossip_bytes": g_got, "baseline_gossip_bytes": g_base,
+            "byte_win": (1.0 - got / base) if base else 0.0}
 
 
 def check_no_full_leaf_allgather(hlo: str, sharded_leaf_bytes,

@@ -13,6 +13,10 @@ class Controller:
         self.tau = tau
         self.theta_min = theta_min
         self.rho_min = rho_min
+        # solver honesty flags from the last controls() call (e.g.
+        # p21_time_infeasible — the per-round time allowance could not be
+        # met even at theta_min; see core.controller.solve_p2).
+        self.diag: dict = {}
 
     def controls(self, reports: DeviceReports, budget: BudgetState):
         raise NotImplementedError
@@ -23,8 +27,9 @@ class HCEF(Controller):
     name = "hcef"
 
     def controls(self, reports, budget):
+        self.diag = {}
         return solve_p2(reports, budget, self.tau, self.theta_min,
-                        self.rho_min)
+                        self.rho_min, diagnostics=self.diag)
 
 
 class CEF(Controller):
@@ -41,8 +46,10 @@ class CEF_F(Controller):
     name = "cef_f"
 
     def controls(self, reports, budget):
+        self.diag = {}
         return solve_p2(reports, budget, self.tau, self.theta_min,
-                        self.rho_min, fix_theta=1.0)
+                        self.rho_min, fix_theta=1.0,
+                        diagnostics=self.diag)
 
 
 class CEF_C(Controller):
@@ -50,8 +57,10 @@ class CEF_C(Controller):
     name = "cef_c"
 
     def controls(self, reports, budget):
+        self.diag = {}
         return solve_p2(reports, budget, self.tau, self.theta_min,
-                        self.rho_min, fix_rho=1.0)
+                        self.rho_min, fix_rho=1.0,
+                        diagnostics=self.diag)
 
 
 class MLL_SGD(Controller):

@@ -7,8 +7,11 @@ theta).  With a wire dtype the effective fraction is the EXACT byte ratio
 of the sparse (value, block-local offset) encoding that
 ``dist/collectives.wire_encode`` puts on the wire — values + offsets +
 per-block scales over the dense payload — via
-``core.compression.compression_ratio_bytes``, so simulated time/energy
-matches what the gossip path actually ships.
+``core.compression.compression_ratio_bytes``, capped at 1.0 to mirror the
+dense-wire fallback (``dist/collectives.wire_ships_dense``), so simulated
+time/energy matches what the gossip path actually ships.  The gossip
+backhaul term is charged PER CLUSTER at each cluster's own level (the
+sender-sized edges of the per-cluster dispatch), not the global max.
 """
 from __future__ import annotations
 
@@ -18,12 +21,19 @@ from repro.core.compression import compression_ratio_bytes
 
 
 def wire_fraction(theta, *, wire_dtype=None, wire_block=1024, dense_bits=16):
-    """Fraction of the dense payload a theta-compressed upload occupies."""
+    """Fraction of the dense payload a theta-compressed upload occupies.
+
+    Capped at 1.0: any level whose sparse (value, offset) encoding would
+    reach the dense bytes takes the dense-wire fallback on the real wire
+    (``dist/collectives.wire_ships_dense``) — e.g. the f32 wire's offsets
+    would 2x the payload at theta = 1 — so the model must never charge
+    more than a dense upload either."""
     if wire_dtype is None:
         return np.asarray(theta, np.float64)
-    return compression_ratio_bytes(theta, wire_dtype=wire_dtype,
-                                   wire_block=wire_block,
-                                   dense_bits=dense_bits)
+    return np.minimum(
+        compression_ratio_bytes(theta, wire_dtype=wire_dtype,
+                                wire_block=wire_block,
+                                dense_bits=dense_bits), 1.0)
 
 
 def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
@@ -32,20 +42,24 @@ def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
     """Expected wall time of one edge round.
 
     Per device: rho*tau*mu + eff(theta)*nu; per cluster: max over its
-    devices; round: max over clusters (+ backhaul when a gossip step
-    follows).  ``backhaul`` is the FULL-model inter-cluster transfer time;
-    with a wire format the gossip payload is the wire-encoded intra-mean at
-    the (already quantized) theta level, so it scales by the same effective
-    fraction (of the max level any device ships — lax.switch dispatches on
-    the max, core/round.py)."""
+    devices, plus — on gossip rounds — the cluster's OWN backhaul
+    transfer; round: max over clusters.  ``backhaul`` is the FULL-model
+    inter-cluster transfer time; with a wire format each cluster's gossip
+    payload is its wire-encoded intra-mean at that cluster's level (the
+    max over its devices — sender-sized edges, core/round.py), so a
+    low-level cluster finishes its send early instead of being charged
+    the global max level.  Returns (round_time, per_cluster_times) with
+    the backhaul term folded into per_cluster_times."""
     eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
                         dense_bits=dense_bits)
     per_dev = rho * tau * mu + eff * nu
     m = int(cluster_of.max()) + 1
     per_cluster = np.array([per_dev[cluster_of == i].max() for i in range(m)])
-    t = float(per_cluster.max())
     if gossip:
-        t += float(backhaul) * (float(np.max(eff)) if wire_dtype else 1.0)
+        eff_c = (np.array([eff[cluster_of == i].max() for i in range(m)])
+                 if wire_dtype else np.ones(m))
+        per_cluster = per_cluster + float(backhaul) * eff_c
+    t = float(per_cluster.max())
     return t, per_cluster
 
 

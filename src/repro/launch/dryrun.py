@@ -20,6 +20,7 @@ from repro.configs.base import ShapeConfig
 from repro.core.round import (FLState, abstract_state, make_prefill_step,
                               make_round_step, make_serve_step)
 from repro.dist.hlo_analysis import (analyze_hlo,
+                                     check_cluster_gossip_bytes,
                                      check_gossip_bytes_scale_with_theta,
                                      check_no_full_leaf_allgather,
                                      sharded_leaf_bytes)
@@ -84,11 +85,19 @@ def _batch_shardings(policy: Policy, batch_abs):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               verbose: bool = True, sparse_gossip: bool = False):
+               verbose: bool = True, sparse_gossip: bool = False,
+               theta_spread: str = None):
+    """``theta_spread``: comma-separated theta levels assigned round-robin
+    to the clusters (e.g. "0.05,0.8") — lowers the train cell with the
+    PER-CLUSTER static dispatch, plus an all-max baseline and a
+    gossip=False (intra-only) program, and emits the
+    ``cluster_gossip_bytes`` verdict: the heterogeneous program's gossip
+    collective-permute bytes must beat the baseline and track the
+    level-vector sum (DESIGN.md §Static-k)."""
     bundle = get_config(arch)
     cfg = bundle.model
     hcef = bundle.hcef
-    if sparse_gossip:
+    if sparse_gossip or theta_spread:
         hcef = dataclasses.replace(hcef, sparse_gossip=True)
     shapes = {s.name: s for s in bundle.shapes}
     shape = shapes[shape_name]
@@ -108,11 +117,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         jax.eval_shape(lambda: model0.init(cfg, jax.random.PRNGKey(0)))))
     serve_extra = dpx if pcount * 2 / 16 > 12e9 else ()
 
+    cluster_levels = extra_jits = None
     if shape.kind == "train":
         topo = bundle.fl_multi if multi_pod else bundle.fl_single
         topo.validate(int(np.prod([mesh.shape[a] for a in dpx])))
         policy = make_train_policy(mesh, topo, dp_axes=dpx)
-        step = make_round_step(cfg, hcef, topo, policy, gossip=True)
         state_abs = abstract_state(cfg, hcef, topo)
         state_sh = FLState(
             params=policy.param_shardings(state_abs.params, stacked=True),
@@ -128,11 +137,35 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         key_sh = NamedSharding(mesh, P(rep, None))
         rho_abs = jax.ShapeDtypeStruct((R,), jnp.float32)
         key_abs = jax.ShapeDtypeStruct((R, 2), jnp.uint32)
-        jitted = jax.jit(step,
-                         in_shardings=(state_sh, batch_sh, ctl_sh, ctl_sh,
-                                       key_sh),
-                         out_shardings=(state_sh, None),
-                         donate_argnums=(0,))
+
+        def mk_jitted(gossip=True, levels=None):
+            step = make_round_step(cfg, hcef, topo, policy, gossip=gossip,
+                                   cluster_levels=levels)
+            return jax.jit(step,
+                           in_shardings=(state_sh, batch_sh, ctl_sh, ctl_sh,
+                                         key_sh),
+                           out_shardings=(state_sh, None),
+                           donate_argnums=(0,))
+
+        if theta_spread and multi_pod:
+            # multi-axis replica dims collapse per-cluster levels to the
+            # max (sparse_neighbor_exchange's conservative fallback), so
+            # the byte-win verdict is single-pod only.
+            print(f"NOTE {arch}/{shape_name}: --theta-spread skipped on "
+                  f"the multi-pod mesh (per-cluster levels collapse to "
+                  f"max over multi-axis replica dims)")
+        elif theta_spread:
+            spread = [float(t) for t in theta_spread.split(",")]
+            C = topo.clusters
+            cluster_levels = tuple(spread[i % len(spread)]
+                                   for i in range(C))
+            # extra programs for the byte-win verdict: all-max baseline
+            # and the intra-only (gossip=False) level-independent floor.
+            extra_jits = {
+                "baseline": mk_jitted(levels=(max(cluster_levels),) * C),
+                "intra": mk_jitted(gossip=False),
+            }
+        jitted = mk_jitted(levels=cluster_levels)
         args = (state_abs, batch_abs, rho_abs, rho_abs, key_abs)
     elif shape.kind == "prefill":
         policy = make_serve_policy(mesh, dp_axes=dpx, kind="prefill",
@@ -173,6 +206,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         t0 = time.time()
         compiled = lowered.compile()
         t_compile = time.time() - t0
+        extra_hlo = {}
+        if extra_jits:
+            for name, j in extra_jits.items():
+                extra_hlo[name] = j.lower(*args).compile().as_text()
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
@@ -180,7 +217,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hstats = analyze_hlo(hlo)
     n_chips = int(np.prod(list(mesh.shape.values())))
 
-    agcheck = gossipcheck = None
+    agcheck = gossipcheck = clustercheck = None
     if shape.kind == "train":
         # the fused compress+mix path must never re-materialize a
         # model-sharded leaf: no single all-gather the size of a full leaf.
@@ -191,11 +228,27 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                   f"{agcheck['allgather_max_bytes']:.3e} B >= half the "
                   f"largest model-sharded leaf "
                   f"{agcheck['largest_sharded_leaf_bytes']:.3e} B")
-        if hcef.sparse_gossip:
+        dense_itemsize = jnp.zeros((), cfg.param_dtype).dtype.itemsize
+        wire_kw = dict(wire_dtype=hcef.wire_dtype,
+                       wire_block=hcef.wire_block,
+                       dense_itemsize=dense_itemsize)
+        if cluster_levels is not None:
+            # per-cluster static-k contract: the heterogeneous program's
+            # gossip permute bytes must beat the all-max baseline and
+            # track the level-vector sum.
+            clustercheck = check_cluster_gossip_bytes(
+                hlo, extra_hlo["baseline"], cluster_levels,
+                intra_hlo=extra_hlo["intra"], **wire_kw)
+            if not clustercheck["ok"]:
+                print(f"WARNING {arch}/{shape_name}: per-cluster gossip "
+                      f"bytes do not track the level vector: "
+                      f"{clustercheck}")
+        elif hcef.sparse_gossip:
             # the static-k lowering contract: the lax.switch branches'
-            # collective-permute payloads must scale with the theta level.
+            # collective-permute payloads must scale with the theta level
+            # (capped by the dense-wire fallback).
             gossipcheck = check_gossip_bytes_scale_with_theta(
-                hlo, hcef.theta_levels)
+                hlo, hcef.theta_levels, **wire_kw)
             if not gossipcheck["ok"]:
                 print(f"WARNING {arch}/{shape_name}: gossip wire bytes do "
                       f"not scale with theta: {gossipcheck['switches']}")
@@ -226,6 +279,15 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         result["no_full_leaf_allgather"] = agcheck
     if gossipcheck is not None:
         result["gossip_bytes_scale_with_theta"] = gossipcheck
+    if clustercheck is not None:
+        result["cluster_gossip_bytes"] = clustercheck
+        if verbose:
+            print(f"  cluster gossip: levels={clustercheck['cluster_levels']}"
+                  f" share={clustercheck['share']:.3f} "
+                  f"bytes={clustercheck['permute_bytes']:.3e} vs baseline "
+                  f"{clustercheck['baseline_permute_bytes']:.3e} "
+                  f"(win {100 * clustercheck['byte_win']:.1f}%) "
+                  f"ok={clustercheck['ok']}")
     if verbose:
         print(f"== {arch} x {shape_name} x "
               f"{'multi' if multi_pod else 'single'} ==")
@@ -244,9 +306,12 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
-                        sparse_gossip: bool = False) -> dict:
+                        sparse_gossip: bool = False,
+                        theta_spread: str = None) -> dict:
     """Run one cell in an isolated subprocess (memory isolation) + cache."""
     tag = ".sparse" if sparse_gossip else ""
+    if theta_spread:
+        tag += ".spread" + theta_spread.replace(",", "_")
     out = out_dir / f"{arch}.{shape}.{mesh_kind}{tag}.json"
     if out.exists():
         return json.loads(out.read_text())
@@ -254,6 +319,8 @@ def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
            "--shape", shape, "--mesh", mesh_kind, "--out", str(out)]
     if sparse_gossip:
         cmd.append("--sparse-gossip")
+    if theta_spread:
+        cmd += ["--theta-spread", theta_spread]
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
     t0 = time.time()
@@ -277,6 +344,12 @@ def main():
     ap.add_argument("--sparse-gossip", action="store_true",
                     help="lower train cells with HCEFConfig.sparse_gossip "
                          "and emit the gossip_bytes_scale_with_theta verdict")
+    ap.add_argument("--theta-spread", default=None,
+                    help="comma-separated theta levels assigned round-robin "
+                         "to clusters (e.g. 0.05,0.8): lowers the "
+                         "PER-CLUSTER dispatch plus an all-max baseline "
+                         "and emits the cluster_gossip_bytes byte-win "
+                         "verdict")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -287,9 +360,10 @@ def main():
             bundle = get_config(arch)
             for s in bundle.shapes:
                 for mesh_kind in ("single", "multi"):
-                    res = run_cell_subprocess(arch, s.name, mesh_kind,
-                                              RESULTS_DIR,
-                                              sparse_gossip=args.sparse_gossip)
+                    res = run_cell_subprocess(
+                        arch, s.name, mesh_kind, RESULTS_DIR,
+                        sparse_gossip=args.sparse_gossip,
+                        theta_spread=args.theta_spread)
                     tag = res["status"]
                     ok += tag == "ok"
                     err += tag == "error"
@@ -300,9 +374,19 @@ def main():
         sys.exit(1 if err else 0)
 
     res = lower_cell(args.arch, args.shape, args.mesh == "multi",
-                     sparse_gossip=args.sparse_gossip)
+                     sparse_gossip=args.sparse_gossip,
+                     theta_spread=args.theta_spread)
     if args.out:
         Path(args.out).write_text(json.dumps(res, indent=1))
+    # gate CI on the HLO verdicts: a lowered-but-wrong wire path must fail
+    # the cell, not just print a warning.
+    bad = [k for k in ("no_full_leaf_allgather",
+                       "gossip_bytes_scale_with_theta",
+                       "cluster_gossip_bytes")
+           if isinstance(res.get(k), dict) and not res[k]["ok"]]
+    if bad:
+        print(f"VERDICT FAILED: {bad}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

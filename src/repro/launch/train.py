@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import OrderedDict
 from pathlib import Path
 
 import jax
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_model
-from repro.core.compression import quantize_theta
+from repro.core.compression import cluster_levels_from_theta, quantize_theta
 from repro.core.controller import BudgetState
 from repro.core.round import init_state, make_round_step
 from repro.data.synthetic import synthetic_tokens
@@ -71,8 +72,26 @@ def main():
 
     R = topo.num_devices
     state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
-    step_g = jax.jit(make_round_step(cfg, hcef, topo, policy, gossip=True))
-    step_i = jax.jit(make_round_step(cfg, hcef, topo, policy, gossip=False))
+    # Per-assignment jit cache (DESIGN.md §Static-k): gossip steps are
+    # keyed by the static per-cluster level assignment so each distinct
+    # (cluster -> level) vector lowers ONE program with sender-sized
+    # payloads.  LRU-bounded: a drifting heterogeneity model could
+    # otherwise visit up to |levels|^C assignments and pin every compiled
+    # executable in host memory (evicting recompiles — the price of a
+    # genuinely new assignment, not of revisiting a recent one).
+    step_cache: OrderedDict = OrderedDict()
+    STEP_CACHE_MAX = 32
+
+    def get_step(gossip_round: bool, cluster_levels=None):
+        key = (gossip_round, cluster_levels)
+        if key not in step_cache:
+            step_cache[key] = jax.jit(make_round_step(
+                cfg, hcef, topo, policy, gossip=gossip_round,
+                cluster_levels=cluster_levels))
+            if len(step_cache) > STEP_CACHE_MAX:
+                step_cache.popitem(last=False)
+        step_cache.move_to_end(key)
+        return step_cache[key]
 
     controller = make_controller(args.controller, hcef.tau)
     n_params = sum(int(x.size) for x in jax.tree.leaves(state.params)) // R
@@ -96,16 +115,25 @@ def main():
             t0 = time.time()
             reports = het.sample_round(rnd)
             rho, theta = controller.controls(reports, budget)
+            gossip_round = (rnd + 1) % hcef.q == 0
+            cluster_levels = None
             if hcef.sparse_gossip:
-                # static-k contract (DESIGN.md §Static-k): the lowered
-                # lax.switch has one branch per theta_level, so the theta
-                # the devices run must be a level — round UP, conservative.
+                # static-k contract (DESIGN.md §Static-k): the wire only
+                # ships grid levels, so the theta the devices run must be
+                # a level — round UP, conservative; gossip rounds on a
+                # mesh also get the per-cluster assignment (sender-sized
+                # payloads, one cached program per distinct assignment).
                 theta = quantize_theta(theta, hcef.theta_levels)
+                if gossip_round and policy is not None:
+                    cluster_levels = cluster_levels_from_theta(
+                        theta, hcef.theta_levels,
+                        np.repeat(np.arange(topo.clusters),
+                                  topo.devices_per_cluster))
             idx = rng.integers(0, corpus.shape[1], (R, b_per_dev))
             batch = {"tokens": jnp.asarray(np.concatenate(
                 [corpus[d, idx[d]] for d in range(R)]))}
             keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
-            fn = step_g if (rnd + 1) % hcef.q == 0 else step_i
+            fn = get_step(gossip_round, cluster_levels)
             state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
                           jnp.asarray(theta, jnp.float32), keys)
             # dense_bits=16: het's model_bits above is n_params * 16 (bf16).
@@ -115,14 +143,14 @@ def main():
             t, _ = round_time(rho, theta, reports.mu, reports.nu, hcef.tau,
                               np.repeat(np.arange(topo.clusters),
                                         topo.devices_per_cluster),
-                              gossip=(rnd + 1) % hcef.q == 0,
+                              gossip=gossip_round,
                               backhaul=het.backhaul_time(), **wire_kw)
             e = round_energy(rho, theta, reports.mu, reports.nu,
                              reports.alpha, reports.p, hcef.tau, **wire_kw)
             budget.time_spent_this += t
             budget.energy_spent_this += e
             budget.r += 1
-            if (rnd + 1) % hcef.q == 0:
+            if gossip_round:
                 budget.time_spent_prev += budget.time_spent_this
                 budget.energy_spent_prev += budget.energy_spent_this
                 budget.time_spent_this = budget.energy_spent_this = 0.0

@@ -23,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import HCEFConfig
-from repro.core.compression import compress_delta, quantize_theta
+from repro.configs.base import HCEFConfig, validate_theta_levels
+from repro.core.compression import (cluster_levels_from_theta,
+                                    compress_delta, quantize_theta)
 from repro.core.controller import BudgetState, DeviceReports
 from repro.core.mixing import check_mixing, make_mixing
 from repro.fl.baselines import Controller
@@ -66,8 +67,8 @@ class FedSimConfig:
         # construction, not rounds later inside compression_ratio_bytes
         if self.wire_dtype not in ("f32", "bf16", "int8"):
             raise ValueError(f"wire_dtype {self.wire_dtype!r}")
-        if self.sparse_gossip and not self.theta_levels:
-            raise ValueError("sparse_gossip requires theta_levels")
+        if self.sparse_gossip:
+            validate_theta_levels(self.theta_levels)
 
 
 class FedSim:
@@ -195,20 +196,23 @@ class FedSim:
 
         # --- Algorithm 3: coordinator solves P2 ---
         rho, theta = self.controller.controls(reports, self.budget)
+        cluster_levels = None
         if cfg.sparse_gossip:
-            # static-k contract: the round step lowers one branch per level,
-            # so the theta the devices actually run must BE a level.
+            # static-k contract: the wire only ships grid levels, so the
+            # theta the devices actually run must BE a level; the cost
+            # model's backhaul term then charges each cluster its own
+            # (max-over-members) level — the sender-sized per-cluster
+            # dispatch of core/round.py.
             theta = quantize_theta(theta, cfg.theta_levels)
+            cluster_levels = cluster_levels_from_theta(
+                theta, cfg.theta_levels, self.cluster_of)
 
         # --- local rounds (Eq. 4/6) ---
         keys = jax.random.split(
             jax.random.PRNGKey(self.rng.integers(2**31)), N)
-        mb = {k: jnp.moveaxis(v, 0, 0) for k, v in main_b.items()}
         # device_round expects per-device batches pytree: dict of (N,tau,b,..)
-        batch_tree = [dict(zip(mb.keys(), vals)) for vals in
-                      zip(*mb.values())] if False else mb
         delta, self.mom, losses = self._device_round(
-            self.params, self.mom, batch_tree, keys,
+            self.params, self.mom, main_b, keys,
             jnp.asarray(rho, jnp.float32))
 
         # --- compression Q + EF (Eq. 7) ---
@@ -253,6 +257,15 @@ class FedSim:
             "sigma2": float(np.mean(reports.sigma2)),
             "G2": float(np.mean(reports.G2)),
         }
+        if cluster_levels is not None:
+            rec["cluster_levels"] = [float(t) for t in cluster_levels]
+        infeas = getattr(self.controller, "diag",
+                         {}).get("p21_time_infeasible")
+        if infeas is not None:
+            # the controller could not meet the per-round time allowance
+            # even at theta_min: the budget still charges the TRUE t_round
+            # above, this flag just keeps the violation visible.
+            rec["time_cap_infeasible"] = bool(np.any(infeas))
         return rec
 
     # ------------------------------------------------------------------

@@ -9,7 +9,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import mixing
 from repro.dist.collectives import (Wire, mix_local,
                                     sparse_neighbor_exchange, wire_decode,
-                                    wire_encode, wire_k)
+                                    wire_encode, wire_k, wire_ships_dense)
 from repro.dist.compat import make_mesh, shard_map
 
 pytestmark = pytest.mark.skipif(
@@ -276,3 +276,123 @@ def test_wire_encode_int8_rejects_large_block():
     with pytest.raises(ValueError, match="32768"):
         wire_encode(jnp.zeros((1, 1 << 16), jnp.float32), k_b=4,
                     wire_block=1 << 16, wire_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# per-cluster wire levels + dense-wire fallback (DESIGN.md §Static-k)
+# ---------------------------------------------------------------------------
+
+def test_wire_ships_dense_cutoffs():
+    """The dense fallback triggers exactly when the sparse encoding would
+    cost at least the dense row: f32 wire (8 B/entry) beats a 4 B dense
+    row only below theta = 0.5, and can never beat a 2 B (bf16) row at
+    theta = 1 — the 2x-offset over-ship the fallback exists to kill."""
+    L = 4096
+    assert wire_ships_dense(1.0, L, wire_dtype="f32", dense_itemsize=4)
+    assert not wire_ships_dense(0.25, L, wire_dtype="f32", dense_itemsize=4)
+    assert wire_ships_dense(0.5, L, wire_dtype="f32", dense_itemsize=4)
+    assert wire_ships_dense(0.3, L, wire_dtype="f32", dense_itemsize=2)
+    # int8 wire (3 B/entry + scales) still wins at theta = 1 vs f32 rows
+    assert not wire_ships_dense(1.0, L, wire_dtype="int8", dense_itemsize=4)
+
+
+def test_sparse_exchange_level_arg_validation(rng):
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="exactly one"):
+        sparse_neighbor_exchange(x, clusters=4, dev=1, axes=(), theta=0.5,
+                                 k=8)
+    with pytest.raises(ValueError, match="exactly one"):
+        sparse_neighbor_exchange(x, clusters=4, dev=1, axes=())
+    with pytest.raises(ValueError, match="entries for"):
+        sparse_neighbor_exchange(x, clusters=4, dev=1, axes=(),
+                                 cluster_theta=(0.5, 1.0))
+
+
+@pytest.mark.parametrize("C,Dev", [(4, 2), (8, 1), (2, 4)])
+def test_per_cluster_all_ones_bitwise_dense(C, Dev, rng):
+    """cluster_theta all-1.0 (uniform dense fallback) IS the dense mix,
+    bit-for-bit — the per-cluster dispatch degrades to mix_local exactly
+    when every cluster ships uncompressed."""
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 96)), jnp.float32)
+    mk = lambda fn: jax.jit(shard_map(
+        fn, mesh=_mesh(), in_specs=P("data", None),
+        out_specs=P("data", None), check_vma=False))
+    got = np.asarray(mk(lambda xl: sparse_neighbor_exchange(
+        xl, clusters=C, dev=Dev, axes=("data",), cluster_theta=(1.0,) * C,
+        hkind="ring"))(x))
+    want = np.asarray(mk(lambda xl: mix_local(
+        xl, clusters=C, dev=Dev, axes=("data",), hkind="ring"))(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("C,Dev,levels", [
+    (4, 2, (0.1, 1.0, 0.25, 1.0)),   # layout A, cluster spans g=2 shards
+    (8, 1, (0.1,) * 4 + (1.0,) * 4),  # layout A, one cluster per shard
+    (2, 4, (0.1, 1.0)),               # layout A, g=4
+    (16, 1, (0.1, 0.1, 1.0, 1.0) * 4),  # layout B, shard-aligned levels
+])
+def test_per_cluster_hetero_matches_reference(C, Dev, levels, rng):
+    """Heterogeneous cluster levels on the mesh (partial-perm level
+    groups) compute the same operator as the off-mesh reference path
+    (roll + sender mask), for every structured layout."""
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 96)), jnp.float32)
+    f = jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(
+            xl, clusters=C, dev=Dev, axes=("data",), cluster_theta=levels,
+            hkind="ring"),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    want = np.asarray(sparse_neighbor_exchange(
+        x, clusters=C, dev=Dev, axes=(), cluster_theta=levels,
+        hkind="ring"))
+    np.testing.assert_allclose(np.asarray(f(x)), want, atol=1e-5)
+
+
+def test_per_cluster_layout_b_escalates_to_shard_level(rng):
+    """Layout B's sender granularity is the SHARD: clusters sharing a
+    payload escalate to the shard's max level (documented contract)."""
+    C, Dev = 16, 1
+    levels = tuple([0.1, 1.0] * 8)  # misaligned: each shard mixes levels
+    Cl = 2
+    esc = tuple(max(levels[j * Cl:(j + 1) * Cl])
+                for j in range(8) for _ in range(Cl))
+    x = jnp.asarray(rng.normal(size=(C, 96)), jnp.float32)
+    f = jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(
+            xl, clusters=C, dev=Dev, axes=("data",), cluster_theta=levels,
+            hkind="ring"),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    want = np.asarray(sparse_neighbor_exchange(
+        x, clusters=C, dev=Dev, axes=(), cluster_theta=esc, hkind="ring"))
+    np.testing.assert_allclose(np.asarray(f(x)), want, atol=1e-5)
+
+
+def test_per_cluster_low_level_contracts_towards_dense(rng):
+    """A hetero assignment is BETWEEN all-low and all-high in fidelity:
+    self terms stay exact, low-level clusters' outgoing terms are top-k
+    approximations — the result still correlates with the dense mix."""
+    C, Dev, L = 8, 1, 64
+    levels = (0.1, 1.0) * 4
+    x = jnp.asarray(rng.normal(size=(C, L)), jnp.float32)
+    f = jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(
+            xl, clusters=C, dev=Dev, axes=("data",), cluster_theta=levels,
+            hkind="ring"),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))
+    got = np.asarray(f(x))
+    want = mixing.ring(C) @ np.asarray(x)
+    cos = (got * want).sum() / (np.linalg.norm(got) * np.linalg.norm(want))
+    assert cos > 0.8, cos
+    # and it is NOT the all-low result: the high-level clusters' terms
+    # are exact, so it must be strictly closer to dense than all-low
+    low = np.asarray(jax.jit(shard_map(
+        lambda xl: sparse_neighbor_exchange(
+            xl, clusters=C, dev=Dev, axes=("data",), theta=0.1,
+            hkind="ring"),
+        mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
+        check_vma=False))(x))
+    assert np.abs(got - want).sum() < np.abs(low - want).sum()

@@ -10,9 +10,11 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import mixing
-from repro.core.compression import compress_delta
+from repro.core.compression import (cluster_levels_from_theta,
+                                    compress_delta, quantize_theta)
 from repro.core.controller import (BudgetState, DeviceReports,
                                    solve_p21_theta, solve_p22_rho)
+from repro.fl.cost_model import wire_fraction
 from repro.kernels import ops, ref
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -84,6 +86,41 @@ def test_gossip_preserves_mean(m):
 
 
 # ---------------------------------------------------------------------------
+# Wire cost model: fraction cap + monotonicity; theta quantization contract
+# ---------------------------------------------------------------------------
+
+@given(theta=hnp.arrays(np.float64, (16,),
+                        elements=st.floats(0.01, 1.0)),
+       wd=st.sampled_from(["f32", "bf16", "int8"]),
+       dense_bits=st.sampled_from([16, 32]))
+@settings(**SETTINGS)
+def test_wire_fraction_capped_and_monotone(theta, wd, dense_bits):
+    """wire_fraction never exceeds 1.0 (the dense-wire fallback ships the
+    dense row once the encoding would cost more) and is nondecreasing in
+    theta (more kept coordinates never get cheaper)."""
+    eff = wire_fraction(theta, wire_dtype=wd, dense_bits=dense_bits)
+    assert (eff <= 1.0 + 1e-12).all()
+    assert (eff > 0).all()
+    order = np.argsort(theta)
+    assert (np.diff(eff[order]) >= -1e-12).all()
+    # ideal (paper) model untouched
+    np.testing.assert_array_equal(wire_fraction(theta), theta)
+
+
+@given(theta=hnp.arrays(np.float64, (8,), elements=st.floats(0.0, 1.0)))
+@settings(**SETTINGS)
+def test_quantize_theta_rounds_up_within_grid(theta):
+    levels = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
+    q = quantize_theta(theta, levels)
+    assert (q >= theta - 1e-6).all()  # never ships fewer coordinates
+    assert all(float(v) in {np.float32(l) for l in levels} for v in q)
+
+
+# (deterministic wire/controller contract tests live in
+# tests/test_wire_contract.py so they run even without hypothesis)
+
+
+# ---------------------------------------------------------------------------
 # Controller: solutions respect constraints (KKT-style feasibility)
 # ---------------------------------------------------------------------------
 
@@ -109,6 +146,26 @@ def test_p21_feasible_and_box(seed, N, d_time, d_energy):
     room = d_energy - np.sum(rho * 5 * rep.alpha)
     if room >= floor:
         assert comm <= room + 1e-6 * max(1.0, abs(room))
+
+
+@given(seed=st.integers(0, 1000), N=st.integers(2, 32),
+       d_time=st.floats(10, 5000), d_energy=st.floats(50, 5000))
+@settings(**SETTINGS)
+def test_p21_time_cap_never_silently_violated(seed, N, d_time, d_energy):
+    """Regression for the silent cap-raise: whenever a device's returned
+    theta exceeds its TRUE time cap (d_time - rho*tau*mu)/nu, the solver
+    must have flagged it infeasible — an unflagged solution always
+    respects the per-round time allowance."""
+    rng = np.random.default_rng(seed)
+    rep = _reports(rng, N)
+    rho = rng.uniform(0.1, 1.0, N)
+    theta, infeas = solve_p21_theta(rho, rep, d_time, d_energy, tau=5,
+                                    return_infeasible=True)
+    raw_cap = (d_time - rho * 5 * rep.mu) / rep.nu
+    violated = theta > raw_cap + 1e-9
+    assert (violated <= infeas).all(), (theta, raw_cap, infeas)
+    # flagged devices sit at the honest floor, not an inflated cap
+    np.testing.assert_allclose(theta[infeas], 0.05)
 
 
 @given(seed=st.integers(0, 1000), N=st.integers(2, 32),

@@ -174,3 +174,103 @@ def test_sparse_gossip_round_step_hlo_and_equivalence():
         err = float(jnp.abs(jnp.asarray(a, jnp.float32)
                             - jnp.asarray(b, jnp.float32)).max())
         assert err < 1e-5, (str(kp), err)
+
+
+def test_per_cluster_round_step_equivalence_and_bytes():
+    """The per-cluster static dispatch (cluster_levels): (a) all-levels=1
+    matches the dense-gossip round step AND ships exactly its gossip
+    bytes (no 2x offset overhead at theta=1 — the dense-wire fallback);
+    (b) a heterogeneous assignment's gossip permute bytes beat the
+    all-max baseline and track the level-vector sum
+    (check_cluster_gossip_bytes, the §Static-k per-cluster contract)."""
+    import dataclasses
+
+    from repro.dist.hlo_analysis import (analyze_hlo,
+                                         check_cluster_gossip_bytes)
+
+    cfg, topo, hcef, state, batch, keys = _setup()
+    levels = (0.05, 0.8, 1.0)
+    hcef_sp = dataclasses.replace(hcef, sparse_gossip=True,
+                                  theta_levels=levels)
+    R, C = topo.num_devices, topo.clusters
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+
+    def sharded(st):
+        shd = policy.param_shardings(st.params, stacked=True)
+        return FLState(
+            params=jax.tree.map(jax.device_put, st.params, shd),
+            momentum=None,
+            ef=jax.tree.map(jax.device_put, st.ef,
+                            policy.param_shardings(st.ef, stacked=True)),
+            round_idx=st.round_idx)
+
+    mk = lambda **kw: jax.jit(make_round_step(cfg, hcef_sp, topo,
+                                              policy=policy, **kw))
+    rho = jnp.ones(R)
+
+    # (a) all-ones assignment == dense round step, same gossip bytes
+    step_pc1 = mk(gossip=True, cluster_levels=(1.0,) * C)
+    step_dn = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                      gossip=True))
+    theta1 = jnp.ones(R)
+    with mesh:
+        s_pc, m_pc = step_pc1(sharded(state), batch, rho, theta1, keys)
+        s_dn, _ = step_dn(sharded(state), batch, rho, theta1, keys)
+    assert float(m_pc["theta_wire"]) == 1.0
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_pc.params)[0],
+            jax.tree_util.tree_flatten_with_path(s_dn.params)[0]):
+        err = float(jnp.abs(jnp.asarray(a, jnp.float32)
+                            - jnp.asarray(b, jnp.float32)).max())
+        assert err < 1e-5, (str(kp), err)
+    with mesh:
+        hlo_pc1 = step_pc1.lower(sharded(state), batch, rho, theta1,
+                                 keys).compile().as_text()
+        hlo_dn = step_dn.lower(sharded(state), batch, rho, theta1,
+                               keys).compile().as_text()
+    b_pc1 = analyze_hlo(hlo_pc1)["gossip_wire_bytes"]
+    b_dn = analyze_hlo(hlo_dn)["gossip_wire_bytes"]
+    assert b_pc1 == b_dn, (b_pc1, b_dn)  # exactly dense bytes at theta=1
+
+    # (b) heterogeneous assignment: byte win vs all-max, level-vector share
+    hetero = (0.05, 0.8)
+    step_het = mk(gossip=True, cluster_levels=hetero)
+    step_base = mk(gossip=True, cluster_levels=(0.8,) * C)
+    step_intra = jax.jit(make_round_step(cfg, hcef_sp, topo, policy=policy,
+                                         gossip=False))
+    theta = jnp.full(R, 0.05)
+    with mesh:
+        lower = lambda st: st.lower(sharded(state), batch, rho, theta,
+                                    keys).compile().as_text()
+        hlo_het, hlo_base, hlo_intra = map(lower, (step_het, step_base,
+                                                   step_intra))
+    chk = check_cluster_gossip_bytes(
+        hlo_het, hlo_base, hetero, wire_dtype=hcef_sp.wire_dtype,
+        wire_block=hcef_sp.wire_block, dense_itemsize=2,
+        intra_hlo=hlo_intra)
+    assert chk["ok"], chk
+    assert chk["permute_bytes"] < chk["baseline_permute_bytes"]
+
+
+def test_round_step_cluster_levels_validation():
+    """Misuse fails loudly: off-grid levels, wrong length, missing
+    sparse_gossip, and the mesh-less path all raise at build time."""
+    cfg, topo, hcef, state, batch, keys = _setup()
+    import dataclasses
+    hcef_sp = dataclasses.replace(hcef, sparse_gossip=True,
+                                  theta_levels=(0.25, 1.0))
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    with pytest.raises(ValueError, match="sparse_gossip"):
+        make_round_step(cfg, hcef, topo, policy=policy,
+                        cluster_levels=(1.0, 1.0))
+    with pytest.raises(ValueError, match="mesh"):
+        make_round_step(cfg, hcef_sp, topo, policy=None,
+                        cluster_levels=(1.0, 1.0))
+    with pytest.raises(ValueError, match="entries for"):
+        make_round_step(cfg, hcef_sp, topo, policy=policy,
+                        cluster_levels=(1.0,))
+    with pytest.raises(ValueError, match="not in theta_levels"):
+        make_round_step(cfg, hcef_sp, topo, policy=policy,
+                        cluster_levels=(0.5, 1.0))

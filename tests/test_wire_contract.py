@@ -1,0 +1,179 @@
+"""Deterministic wire/controller contract tests (no hypothesis needed):
+the theta-quantization contract, the level-grid config validation, the
+wire_fraction cap, the per-cluster level helper and the P2.1 time-cap
+honesty flag — the bugfix batch of the per-cluster dispatch PR."""
+import numpy as np
+import pytest
+
+from repro.configs.base import HCEFConfig
+from repro.core.compression import (cluster_levels_from_theta,
+                                    compression_ratio_bytes, quantize_theta)
+from repro.core.controller import (BudgetState, DeviceReports, solve_p2,
+                                   solve_p21_theta)
+from repro.fl.cost_model import round_energy, round_time, wire_fraction
+
+
+# ---------------------------------------------------------------------------
+# quantize_theta: round UP within the grid, raise out of grid
+# ---------------------------------------------------------------------------
+
+def test_quantize_theta_rounds_up():
+    levels = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
+    theta = np.array([0.01, 0.05, 0.07, 0.39, 0.41, 1.0])
+    q = quantize_theta(theta, levels)
+    np.testing.assert_allclose(q, [0.05, 0.05, 0.1, 0.4, 0.6, 1.0])
+    assert (q >= theta - 1e-6).all()  # never ships fewer coordinates
+
+
+def test_quantize_theta_raises_out_of_grid():
+    """A grid that stops short of the controller's theta must raise, not
+    silently clamp DOWN (which would ship fewer coordinates than Q kept —
+    the 'never ships fewer coordinates' contract)."""
+    with pytest.raises(ValueError, match="largest level"):
+        quantize_theta(np.array([0.9]), levels=(0.05, 0.5, 0.8))
+    # exact top-of-grid (and a float-eps overshoot) are fine
+    np.testing.assert_allclose(
+        quantize_theta(np.array([0.8, 0.8 + 1e-12]), (0.05, 0.8)),
+        [0.8, 0.8])
+
+
+def test_cluster_levels_from_theta_takes_cluster_max():
+    levels = (0.05, 0.2, 0.8, 1.0)
+    theta = np.array([0.05, 0.7, 0.1, 0.05, 1.0, 0.05])
+    cluster_of = np.array([0, 0, 1, 1, 2, 2])
+    assert cluster_levels_from_theta(theta, levels, cluster_of) \
+        == (0.8, 0.2, 1.0)
+
+
+def test_theta_level_grid_validated_at_config_construction():
+    from repro.runtime.driver import FedSimConfig
+    with pytest.raises(ValueError, match="cover"):
+        HCEFConfig(sparse_gossip=True, theta_levels=(0.05, 0.5, 0.8))
+    with pytest.raises(ValueError, match="cover"):
+        FedSimConfig(sparse_gossip=True, theta_levels=(0.05, 0.5))
+    with pytest.raises(ValueError, match="\\(0, 1\\]"):
+        HCEFConfig(sparse_gossip=True, theta_levels=(0.0, 1.0))
+    HCEFConfig(sparse_gossip=True, theta_levels=(0.05, 1.0))  # ok
+    HCEFConfig(sparse_gossip=False, theta_levels=(0.05, 0.5))  # unused grid
+
+
+# ---------------------------------------------------------------------------
+# wire_fraction: capped at 1.0 (dense fallback), monotone in theta
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wd", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("dense_bits", [16, 32])
+def test_wire_fraction_capped_and_monotone(wd, dense_bits):
+    theta = np.linspace(0.01, 1.0, 50)
+    eff = wire_fraction(theta, wire_dtype=wd, dense_bits=dense_bits)
+    assert (eff <= 1.0 + 1e-12).all()
+    assert (eff > 0).all()
+    assert (np.diff(eff) >= -1e-12).all()
+    # the f32 wire at theta=1 over bf16 entries would be 4x dense without
+    # the cap — the exact over-ship the dense fallback removes
+    raw = compression_ratio_bytes(1.0, wire_dtype="f32", dense_bits=16)
+    assert raw == 4.0
+    assert wire_fraction(1.0, wire_dtype="f32", dense_bits=16) == 1.0
+    # ideal (paper) model untouched
+    np.testing.assert_array_equal(wire_fraction(theta), theta)
+
+
+def test_round_time_charges_backhaul_per_cluster():
+    """A slow-compute cluster with a LOW wire level must not be charged
+    the global max level's backhaul: each cluster's transfer is sized by
+    its own (max-over-members) level and overlaps other clusters'."""
+    # cluster 0: slow compute, theta_min; cluster 1: fast compute, theta=1
+    rho = np.array([1.0, 1.0, 1.0, 1.0])
+    theta = np.array([0.05, 0.05, 1.0, 1.0])
+    mu = np.array([60.0, 60.0, 1.0, 1.0])
+    nu = np.full(4, 100.0)
+    cluster_of = np.array([0, 0, 1, 1])
+    kw = dict(backhaul=1000.0, gossip=True, wire_dtype="f32",
+              dense_bits=32)
+    t, per_cluster = round_time(rho, theta, mu, nu, tau=5,
+                                cluster_of=cluster_of, **kw)
+    eff_lo = wire_fraction(0.05, wire_dtype="f32", dense_bits=32)
+    eff_hi = wire_fraction(1.0, wire_dtype="f32", dense_bits=32)
+    want0 = 1.0 * 5 * 60.0 + eff_lo * 100.0 + 1000.0 * eff_lo
+    want1 = 1.0 * 5 * 1.0 + eff_hi * 100.0 + 1000.0 * eff_hi
+    np.testing.assert_allclose(per_cluster, [want0, want1])
+    assert t == max(want0, want1)
+    # the old max(eff) model charged the WHOLE round the dense backhaul on
+    # top of the slow cluster's compute — strictly more than per-cluster
+    # accounting, which lets the slow-but-light cluster overlap
+    old_t = max(1.0 * 5 * 60.0 + eff_lo * 100.0,
+                1.0 * 5 * 1.0 + eff_hi * 100.0) + 1000.0 * eff_hi
+    assert t < old_t
+    # classic model (no wire): gossip adds the full backhaul everywhere
+    t2, pc2 = round_time(rho, theta, mu, nu, tau=5, cluster_of=cluster_of,
+                         backhaul=1000.0, gossip=True)
+    np.testing.assert_allclose(
+        pc2, [1.0 * 5 * 60.0 + 0.05 * 100.0 + 1000.0,
+              1.0 * 5 * 1.0 + 1.0 * 100.0 + 1000.0])
+
+
+def test_round_energy_uses_capped_fraction():
+    rho = np.array([1.0])
+    theta = np.array([1.0])
+    mu = nu = alpha = p = np.array([1.0])
+    # f32 wire over 16-bit dense would be 4x without the cap
+    e = round_energy(rho, theta, mu, nu, alpha, p, tau=2,
+                     wire_dtype="f32", dense_bits=16)
+    assert e == pytest.approx(1.0 * 2 * 1.0 + 1.0 * 1.0 * 1.0)
+
+
+# ---------------------------------------------------------------------------
+# P2.1 time-cap honesty (the silent clip-up regression)
+# ---------------------------------------------------------------------------
+
+def _reports(N):
+    return DeviceReports(sigma2=np.ones(N), G2=np.ones(N),
+                         mu=np.full(N, 100.0), alpha=np.ones(N),
+                         nu=np.full(N, 400.0), p=np.full(N, 0.5))
+
+
+def test_p21_infeasible_allowance_flags_every_device():
+    """d_time too small for even theta_min communication: the floor is
+    returned AND every device is flagged, so BudgetState accounting (which
+    charges the true round time) stays visibly truthful."""
+    N = 4
+    rep = _reports(N)
+    rho = np.full(N, 1.0)
+    # d_time < rho*tau*mu: no communication budget at all
+    theta, infeas = solve_p21_theta(rho, rep, d_time=100.0, d_energy=1e9,
+                                    tau=5, return_infeasible=True)
+    assert infeas.all()
+    np.testing.assert_allclose(theta, 0.05)
+    # a generous allowance is feasible everywhere and respects the cap
+    theta, infeas = solve_p21_theta(rho, rep, d_time=1e6, d_energy=1e9,
+                                    tau=5, return_infeasible=True)
+    assert not infeas.any()
+    assert (rho * 5 * rep.mu + theta * rep.nu <= 1e6 + 1e-6).all()
+    # default call signature unchanged (returns theta only)
+    theta_only = solve_p21_theta(rho, rep, 1e6, 1e9, tau=5)
+    np.testing.assert_allclose(theta_only, theta)
+
+
+def test_solve_p2_diagnostics_surface_infeasibility():
+    N = 4
+    rep = _reports(N)
+    budget = BudgetState(time_budget=10.0, energy_budget=1e9, phi=1, q=1)
+    diag = {}
+    solve_p2(rep, budget, tau=5, diagnostics=diag)
+    assert diag["p21_time_infeasible"].all()  # 10s cannot cover tau*mu
+    budget2 = BudgetState(time_budget=1e9, energy_budget=1e9, phi=1, q=1)
+    diag2 = {}
+    solve_p2(rep, budget2, tau=5, diagnostics=diag2)
+    assert not diag2["p21_time_infeasible"].any()
+    # fix_theta (CEF-F style) also reports: huge fixed communication
+    diag3 = {}
+    solve_p2(rep, budget, tau=5, fix_theta=1.0, diagnostics=diag3)
+    assert diag3["p21_time_infeasible"].all()
+
+
+def test_controller_objects_expose_diag():
+    from repro.fl.baselines import make_controller
+    ctl = make_controller("hcef", tau=5)
+    budget = BudgetState(time_budget=10.0, energy_budget=1e9, phi=1, q=1)
+    ctl.controls(_reports(4), budget)
+    assert ctl.diag["p21_time_infeasible"].all()
