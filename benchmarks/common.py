@@ -38,7 +38,7 @@ _DATASETS = {
 def make_sim(scheme: str, *, dataset="cifar", beta=1.0, backhaul="ring",
              p_edge=0.4, tau=5, q=5, n_devices=16, n_clusters=8,
              time_budget=np.inf, energy_budget=np.inf, seed=0,
-             eta=0.02) -> FedSim:
+             eta=0.02, chaos=None) -> FedSim:
     ds = _DATASETS[dataset]
     vc = VisionConfig(name=f"mlp-{dataset}", kind="mlp",
                       image_size=ds["image_size"], channels=ds["channels"],
@@ -61,7 +61,7 @@ def make_sim(scheme: str, *, dataset="cifar", beta=1.0, backhaul="ring",
                   device_data=data, test_data=(Xt, Yt),
                   controller=make_controller(scheme, tau),
                   het=het, time_budget=time_budget,
-                  energy_budget=energy_budget, phi=200)
+                  energy_budget=energy_budget, phi=200, chaos=chaos)
 
 
 def run_scheme(scheme: str, *, rounds=60, eval_every=4, target_acc=None,

@@ -65,6 +65,39 @@ def omega1(z: float) -> float:
         + z / (1 - z + 1e-12) ** 2
 
 
+def participation_mixing(H, conn):
+    """Effective gossip operator under cluster backhaul partitions.
+
+    ``conn``: (C,) 0/1 connectivity mask (1 = the cluster's backhaul link is
+    up).  A partitioned cluster neither sends nor receives: its COLUMN is
+    zeroed for other receivers (the lost neighbor weight is absorbed into
+    each receiver's self weight, keeping rows stochastic), and its own ROW
+    becomes e_c — it keeps its intra-cluster model and mixes stale-by-1
+    when it reconnects (DESIGN.md §Degraded-mode).
+
+    Bit-for-bit contract: with ``conn = 1`` everywhere the returned matrix
+    is BITWISE equal to ``H`` (off-diagonal entries multiplied by exactly
+    1.0, self weights get exactly +0.0 absorbed mass), so the masked
+    aggregation path collapses to today's path with an all-alive mask.
+
+    Works on jnp arrays inside jit (conn may be traced) and on numpy
+    inputs (returns jnp; callers wanting numpy wrap in ``np.asarray``).
+    Rows stay stochastic by construction; double stochasticity (and with
+    it Assumption 5's spectral guarantees) is intentionally NOT preserved
+    under partitions — that is the degraded mode.
+    """
+    import jax.numpy as jnp
+
+    H = jnp.asarray(H)
+    conn = jnp.asarray(conn, H.dtype)
+    C = H.shape[0]
+    eye = jnp.eye(C, dtype=H.dtype)
+    offdiag = H * (1.0 - eye)
+    self_w = jnp.diag(H) + (offdiag * (1.0 - conn[None, :])).sum(axis=1)
+    Hm = offdiag * conn[None, :] + eye * self_w[:, None]
+    return jnp.where(conn[:, None] > 0, Hm, eye)
+
+
 def check_mixing(H: np.ndarray, atol=1e-9) -> None:
     assert np.allclose(H, H.T, atol=atol), "H must be symmetric"
     assert np.allclose(H.sum(0), 1, atol=atol), "H must be doubly stochastic"

@@ -155,7 +155,32 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
     spmd = tuple(policy.replica_axes) if (
         policy is not None and policy.replica_axes) else None
 
-    def round_step(state: FLState, batch, rho, theta, keys):
+    def round_step(state: FLState, batch, rho, theta, keys,
+                   alive=None, alive_w=None, conn=None):
+        """``alive``/``alive_w``/``conn`` are the chaos masks (all None on
+        fault-free rounds — the unmasked trace below is then byte-identical
+        to the pre-chaos step, which is what keeps it bit-for-bit):
+
+          alive   (R,) 0/1 — device made this round's deadline.  A dropped
+                  device's compressed contribution is folded back into its
+                  error feedback (``runtime.chaos.fold_dropped_updates``'s
+                  conservation invariant), so nothing is silently lost.
+          alive_w (R,) f32 HOST-computed ``dist.collectives.
+                  participation_weights`` — renormalizes the unchanged
+                  sum/Dev intra mean to the mean over live devices.
+          conn    (C,) 0/1 — cluster backhaul up; gossip applies
+                  ``mixing.participation_mixing`` (partitioned clusters
+                  keep their intra model, mix stale-by-1 on reconnect).
+        """
+        chaos = alive is not None
+        if chaos:
+            if alive_w is None:
+                raise ValueError("alive requires alive_w (host-computed "
+                                 "participation_weights)")
+            alive_f = jnp.asarray(alive, jnp.float32)
+            alive_wf = jnp.asarray(alive_w, jnp.float32)
+            conn_f = (jnp.asarray(conn, jnp.float32)
+                      if conn is not None else None)
         batch_r = _split_batch(batch, R, hcef.tau)
         if R == 1:
             # No vmap: a batched-by-1 tracer would have an extra leading dim
@@ -208,7 +233,9 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             sparse = hcef.sparse_gossip and gossip and R > 1
 
             def per_leaf(x0l, dl, el, spec, mix_hkind):
-                def local(x0s, ds, es, ts):
+                pass_conn = chaos and conn is not None and mix_hkind != "none"
+
+                def local(x0s, ds, es, ts, *cargs):
                     # No caller-side f32 upcast: the top-k kernel adds the
                     # error feedback and thresholds in f32 internally, per
                     # VMEM block (bf16-native path).
@@ -219,19 +246,38 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     masked, resid = _compress_flat(flat, ts,
                                                    hcef.block_size, impl,
                                                    ef=ef_flat)
+                    mix_kw = {}
+                    if chaos:
+                        # EF conservation fold: a dropped device's split is
+                        # routed whole into its residual, so per device
+                        # contribution + ef_out == delta + ef_old exactly.
+                        a = (cargs[0] > 0)[:, None]
+                        masked, resid = (
+                            jnp.where(a, masked, jnp.zeros_like(masked)),
+                            jnp.where(a, resid, masked + resid))
+                        mix_kw = dict(alive=cargs[1],
+                                      conn=cargs[2] if pass_conn else None)
                     upd = x0s + masked.reshape(ds.shape).astype(x0s.dtype)
                     # rep_axes == () with R > 1 means the replica dim is
                     # fully replicated per shard; mix_local then runs the
                     # dense-local factorization — never skip W silently.
                     y = mix_local(upd, clusters=C, dev=Dev, axes=rep_axes,
-                                  hkind=mix_hkind) if R > 1 else upd
+                                  hkind=mix_hkind, **mix_kw) if R > 1 \
+                        else upd
                     return (y.astype(x0s.dtype),
                             resid.reshape(es.shape).astype(es.dtype))
 
-                fn = shard_map(local, mesh=mesh,
-                               in_specs=(spec, spec, spec, rspec),
+                in_specs = (spec, spec, spec, rspec)
+                args = (x0l, dl, el, theta)
+                if chaos:
+                    in_specs += (rspec, rspec)
+                    args += (alive_f, alive_wf)
+                    if pass_conn:
+                        in_specs += (PS(None),)
+                        args += (conn_f,)
+                fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                                out_specs=(spec, spec), check_vma=False)
-                return fn(x0l, dl, el, theta)
+                return fn(*args)
 
             flat_x, treedef = jax.tree.flatten(state.params)
             flat_d = treedef.flatten_up_to(delta)
@@ -248,16 +294,22 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                 # them); every cluster's outgoing band payload is sized
                 # by its own level via partial-perm level groups inside
                 # sparse_neighbor_exchange — no switch, no dead branches.
+                gossip_conn = chaos and conn is not None
+
                 def gossip_leaf_pc(ml, spec):
-                    def local_g(ms):
+                    def local_g(ms, *cargs):
                         return sparse_neighbor_exchange(
                             ms, clusters=C, dev=Dev, axes=rep_axes,
                             cluster_theta=cluster_levels, hkind=hkind,
                             wire_dtype=hcef.wire_dtype,
-                            wire_block=hcef.wire_block, intra_done=True)
+                            wire_block=hcef.wire_block, intra_done=True,
+                            conn=cargs[0] if gossip_conn else None)
 
-                    return shard_map(local_g, mesh=mesh, in_specs=(spec,),
-                                     out_specs=spec, check_vma=False)(ml)
+                    gspecs = (spec,) + ((PS(None),) if gossip_conn else ())
+                    gargs = (ml,) + ((conn_f,) if gossip_conn else ())
+                    return shard_map(local_g, mesh=mesh, in_specs=gspecs,
+                                     out_specs=spec,
+                                     check_vma=False)(*gargs)
 
                 new_flat = [gossip_leaf_pc(m, s)
                             for m, s in zip(new_flat, flat_s)]
@@ -276,16 +328,22 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     jnp.searchsorted(lv, jnp.max(theta), side="left"),
                     len(levels) - 1).astype(jnp.int32)
 
+                gossip_conn = chaos and conn is not None
+
                 def gossip_leaf(ml, spec, level):
-                    def local_g(ms):
+                    def local_g(ms, *cargs):
                         return sparse_neighbor_exchange(
                             ms, clusters=C, dev=Dev, axes=rep_axes,
                             theta=level, hkind=hkind,
                             wire_dtype=hcef.wire_dtype,
-                            wire_block=hcef.wire_block, intra_done=True)
+                            wire_block=hcef.wire_block, intra_done=True,
+                            conn=cargs[0] if gossip_conn else None)
 
-                    return shard_map(local_g, mesh=mesh, in_specs=(spec,),
-                                     out_specs=spec, check_vma=False)(ml)
+                    gspecs = (spec,) + ((PS(None),) if gossip_conn else ())
+                    gargs = (ml,) + ((conn_f,) if gossip_conn else ())
+                    return shard_map(local_g, mesh=mesh, in_specs=gspecs,
+                                     out_specs=spec,
+                                     check_vma=False)(*gargs)
 
                 def branch(level):
                     return lambda ms: [gossip_leaf(m, s, level)
@@ -300,12 +358,24 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                                       block=hcef.block_size,
                                       error_feedback=hcef.error_feedback,
                                       impl=impl)
+            if chaos:
+                from repro.runtime.chaos import fold_dropped_updates
+                comp, ef = fold_dropped_updates(comp, ef, alive_f)
 
             # gossip rounds fold the per-cluster mean and the (C, C) H
             # matmul into ONE (C, R) x (R, d) GEMM: M = H diag(1/Dev) B,
             # Dev x less compute than the dense (R, R) einsum at identical
             # memory traffic; intra rounds are just the per-cluster mean.
-            M = jnp.repeat(H / Dev, Dev, axis=1)  # (C, R)
+            # Under chaos the same GEMM absorbs the whole degraded-mode
+            # contract: H -> participation_mixing(H, conn) and diag(1/Dev)
+            # -> diag(alive_w/Dev) (the live-count-renormalized mean).
+            Hg = H
+            if chaos and conn is not None and gossip:
+                Hg = mixing.participation_mixing(H, conn_f).astype(
+                    jnp.float32)
+            M = jnp.repeat(Hg / Dev, Dev, axis=1)  # (C, R)
+            if chaos:
+                M = M * alive_wf[None, :]
 
             def aggregate(x0_leaf, comp_leaf):
                 upd = (x0_leaf.astype(jnp.float32)
@@ -315,7 +385,11 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     if gossip:
                         yc = (M @ upd.reshape(R, -1)).reshape((C,) + dims)
                     else:
-                        yc = upd.reshape((C, Dev) + dims).mean(axis=1)
+                        uw = upd
+                        if chaos:
+                            uw = upd * alive_wf.reshape(
+                                (R,) + (1,) * len(dims))
+                        yc = uw.reshape((C, Dev) + dims).mean(axis=1)
                     upd = jnp.broadcast_to(
                         yc[:, None], (C, Dev) + dims).reshape(upd.shape)
                 return upd.astype(x0_leaf.dtype)

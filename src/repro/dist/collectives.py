@@ -201,7 +201,7 @@ def _mixing_cached(hkind: str, C: int, p_edge: float, seed: int):
 # ---------------------------------------------------------------------------
 
 def mix_local(x, *, clusters: int, dev: int, axes, hkind: str = "ring",
-              p_edge: float = 0.4, seed: int = 0):
+              p_edge: float = 0.4, seed: int = 0, alive=None, conn=None):
     """Apply the aggregation operator W to this shard's replica slice.
 
     x: (R_local, *dims) — the local slice of a (R, *dims) stacked-replica
@@ -209,12 +209,37 @@ def mix_local(x, *, clusters: int, dev: int, axes, hkind: str = "ring",
     Must be called inside a ``shard_map`` that maps over ``axes``.
     ``hkind``: "ring" | "complete" | "erdos_renyi" | "none" (intra only).
 
+    Participation masks (DESIGN.md §Degraded-mode contract; both optional,
+    traced ok):
+
+      ``alive``: (R_local,) per-replica participation WEIGHTS sharded
+        like x, from ``participation_weights`` — live device r carries
+        Dev / live-count(cluster(r)), dead devices 0.0, fully dead
+        clusters 1.0 on every row — so the unchanged sum/Dev intra mean
+        becomes the mean over live devices (dead clusters keep the plain
+        mean: their rows carry the previous consensus).  The Dev/cnt
+        renormalization is computed on the HOST (the fault trace lives
+        there anyway), so the device graph only multiplies by an input
+        array — see ``_alive_premultiply`` for why that is what makes
+        all-alive bit-for-bit.
+      ``conn``:  (C,) 0/1 cluster backhaul mask, REPLICATED on every
+        shard — gossip applies ``mixing.participation_mixing(H, conn)``:
+        partitioned senders contribute zero (lost weight absorbed into
+        each receiver's self weight) and partitioned receivers keep
+        their own intra mean.
+
+    With ``alive``/``conn`` of all ones the result is bit-for-bit the
+    unmasked path; with ``None`` the old code runs untouched.
+
     Returns the local slice of W @ x_global, same shape/dtype as x.
     """
     axes = _axes_tuple(axes)
     C, Dev = clusters, dev
+    conn = _conn_or_none(conn)
+    if alive is not None:
+        x = _alive_premultiply(x, alive)
     if not axes:
-        return _mix_dense_local(x, C, Dev, hkind, p_edge, seed)
+        return _mix_dense_local(x, C, Dev, hkind, p_edge, seed, conn=conn)
     n = _n_shards(axes)
     R_local = x.shape[0]
     R = R_local * n
@@ -222,28 +247,118 @@ def mix_local(x, *, clusters: int, dev: int, axes, hkind: str = "ring",
     single = len(axes) == 1
 
     if single and R_local <= Dev and Dev % R_local == 0:
-        return _mix_layout_a(x, axes[0], n, C, Dev, hkind, p_edge, seed)
+        return _mix_layout_a(x, axes[0], n, C, Dev, hkind, p_edge, seed,
+                             conn=conn)
     if single and R_local % Dev == 0:
-        return _mix_layout_b(x, axes[0], n, C, Dev, hkind, p_edge, seed)
-    return _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed)
+        return _mix_layout_b(x, axes[0], n, C, Dev, hkind, p_edge, seed,
+                             conn=conn)
+    return _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed, conn=conn)
 
 
-def _weighted_bands(mean, rotate_fn, cl, C, hkind, p_edge, seed, dtype):
+def _conn_or_none(conn):
+    """Short-circuit a CONCRETE all-ones backhaul mask to None.
+
+    Mirrors ``_alive_premultiply``'s concrete short-circuit: all-connected
+    gossip must be the LITERAL unmasked graph.  A traced all-ones conn is
+    bitwise on the dense paths, but on the sparse wire path a cluster_theta
+    mix that includes a dense-fallback level drifts <= 1 ulp (the band
+    accumulation fuses the decode and the coefficient multiply; ANY
+    intervening conn op — multiply, barrier or select — repartitions that
+    fusion).  Round drivers therefore pass ``conn=None`` outright on
+    fault-free rounds; this guard covers concrete callers for free.
+    """
+    if conn is None or isinstance(conn, jax.core.Tracer):
+        return conn
+    if np.all(np.asarray(conn) == 1):
+        return None
+    return conn
+
+
+def _alive_premultiply(x, alive):
+    """Premultiply rows by the (R_local,) participation weights.
+
+    Masking as an input premultiply (instead of a masked mean with a
+    traced divisor) is what makes the all-alive case bit-for-bit: every
+    weight is exactly 1.0 (``participation_weights`` computes Dev/cnt on
+    the host), x * 1.0 is bitwise identity, and everything downstream is
+    the LITERAL unmasked computation.  The renormalization must NOT be
+    computed in-graph: any nontrivial weight subgraph (a psum of counts,
+    a where/divide) shifts XLA's kernel boundaries and with them FMA
+    contraction and reduction tiling inside the mix itself — observed
+    ULP drift even on bitwise-identical inputs.  A bare multiply by an
+    input array plus this ``optimization_barrier`` (which pins the
+    kernel boundary where the unmasked graph's parameter boundary sits)
+    leaves the downstream kernels unchanged in every tested layout but
+    one SIMD-tail corner (dense erdos_renyi C=16/Dev=1, last column:
+    <= 1 ULP).  Concrete all-ones masks therefore short-circuit to the
+    literal unmasked graph — bitwise identity by construction — and the
+    round driver passes ``alive=None`` outright on fault-free rounds.
+    """
+    if not isinstance(alive, jax.core.Tracer):
+        a_np = np.asarray(alive)
+        if np.all(a_np == 1):
+            return x
+    aw = jnp.asarray(alive, x.dtype).reshape(
+        (x.shape[0],) + (1,) * (x.ndim - 1))
+    return jax.lax.optimization_barrier(x * aw)
+
+
+def participation_weights(alive, *, clusters: int, dev: int) -> np.ndarray:
+    """Host-side per-replica weights for the ``alive=`` mask kwargs.
+
+    alive: (R,) 0/1 device liveness (R = clusters * dev, cluster-major).
+    Returns (R,) f32 weights: live device r gets dev / live-count of its
+    cluster — the unchanged sum/dev intra mean downstream then equals
+    the mean over live devices — dead devices get 0.0, and a fully dead
+    cluster gets 1.0 on every row (the plain mean: in the round step its
+    rows carry the previous cluster consensus, so it keeps its model).
+    An all-alive input returns exact ones (dev/dev == 1), the bitwise
+    identity.
+    """
+    a = np.asarray(alive, np.float32).reshape(clusters, dev)
+    cnt = a.sum(axis=1, keepdims=True)
+    w = np.where(cnt > 0, a * (dev / np.maximum(cnt, 1.0)), 1.0)
+    return np.ascontiguousarray(w.reshape(-1).astype(np.float32))
+
+
+def _weighted_bands(mean, rotate_fn, cl, C, hkind, p_edge, seed, dtype,
+                    conn=None):
     """diag term + one rotation per nonzero band of H.
 
     mean: this shard's cluster mean(s); rotate_fn(tree, o) must return the
     band-o rotated means; cl: local cluster index array (traced ok).
+
+    ``conn``: optional (C,) 0/1 backhaul mask, replicated on every shard —
+    applies ``mixing.participation_mixing(H, conn)`` band-wise.  Because
+    conn is replicated it is never rotated over the wire: band o's source
+    conn at receiver c is just ``conn[(c - o) % C]``.  Partitioned-source
+    contributions are zeroed, their weight accumulates into ``absorbed``
+    (added to the self term), and a partitioned receiver keeps ``mean``.
+    All-connected is bitwise the unmasked path (the c_o factors are exact
+    1.0 and both final selects take the untouched branch).
     """
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl).astype(dtype)
     expand = lambda w: w.reshape(w.shape + (1,) * (mean.ndim - w.ndim))
+    cw = None if conn is None else jnp.asarray(conn, dtype)
     y = expand(take(diag)) * mean
+    absorbed = None
     for o, coef in sorted(bands.items()):
-        y = y + expand(take(coef)) * rotate_fn(mean, o)
+        rot = rotate_fn(mean, o)
+        if cw is None:
+            y = y + expand(take(coef)) * rot
+        else:
+            c_o = jnp.take(cw, (cl - o) % C)
+            y = y + expand(take(coef)) * (expand(c_o) * rot)
+            a_o = take(coef) * (1.0 - c_o)
+            absorbed = a_o if absorbed is None else absorbed + a_o
+    if cw is not None and absorbed is not None:
+        y = jnp.where(expand(absorbed) > 0, y + expand(absorbed) * mean, y)
+        y = jnp.where(expand(jnp.take(cw, cl)) > 0, y, mean)
     return y
 
 
-def _mix_layout_a(x, axis, n, C, Dev, hkind, p_edge, seed):
+def _mix_layout_a(x, axis, n, C, Dev, hkind, p_edge, seed, conn=None):
     """One cluster per shard, spanning g = Dev // R_local shards."""
     R_local = x.shape[0]
     g = Dev // R_local
@@ -256,14 +371,24 @@ def _mix_layout_a(x, axis, n, C, Dev, hkind, p_edge, seed):
     if hkind == "complete":
         # H = 11^T / C: the mix is the global cluster mean.  psum counts
         # every cluster g times (replicated over its group).
-        y = jax.lax.psum(mean, axis) / (g * C)
+        if conn is None:
+            y = jax.lax.psum(mean, axis) / (g * C)
+        else:
+            cw = jnp.asarray(conn, x.dtype)
+            my_c = jnp.take(cw, cl)
+            y = jax.lax.psum(mean * my_c, axis) / (g * C)
+            # partitioned columns' lost 1/C weight absorbed into self
+            dead = C - jnp.asarray(conn, jnp.float32).sum()
+            y = jnp.where(dead > 0, y + mean * (dead / C), y)
+            y = jnp.where(my_c > 0, y, mean)
     else:
         rot = lambda m, o: _rotate(m, axis, o * g, n)
-        y = _weighted_bands(mean, rot, cl, C, hkind, p_edge, seed, x.dtype)
+        y = _weighted_bands(mean, rot, cl, C, hkind, p_edge, seed, x.dtype,
+                            conn=conn)
     return jnp.broadcast_to(y[None], x.shape).astype(x.dtype)
 
 
-def _mix_layout_b(x, axis, n, C, Dev, hkind, p_edge, seed):
+def _mix_layout_b(x, axis, n, C, Dev, hkind, p_edge, seed, conn=None):
     """Cl = R_local // Dev whole clusters per shard."""
     R_local = x.shape[0]
     Cl = R_local // Dev
@@ -272,8 +397,18 @@ def _mix_layout_b(x, axis, n, C, Dev, hkind, p_edge, seed):
     if hkind == "none":
         y = means
     elif hkind == "complete":
-        y = jax.lax.psum(means.sum(axis=0), axis) / C
-        y = jnp.broadcast_to(y[None], means.shape)
+        if conn is None:
+            y = jax.lax.psum(means.sum(axis=0), axis) / C
+            y = jnp.broadcast_to(y[None], means.shape)
+        else:
+            cl_b = _flat_shard_index((axis,)) * Cl + jnp.arange(Cl)
+            my_c = jnp.take(jnp.asarray(conn, x.dtype), cl_b)
+            mce = my_c.reshape((Cl,) + (1,) * len(dims))
+            base = jax.lax.psum((means * mce).sum(axis=0), axis) / C
+            base = jnp.broadcast_to(base[None], means.shape)
+            dead = C - jnp.asarray(conn, jnp.float32).sum()
+            y = jnp.where(dead > 0, base + means * (dead / C), base)
+            y = jnp.where(mce > 0, y, means)
     else:
         cl = _flat_shard_index((axis,)) * Cl + jnp.arange(Cl)
 
@@ -287,12 +422,22 @@ def _mix_layout_b(x, axis, n, C, Dev, hkind, p_edge, seed):
             r_q1 = _rotate(m, axis, q + 1, n)
             return jnp.concatenate([r_q1[Cl - rm:], r_q[:Cl - rm]], axis=0)
 
-        y = _weighted_bands(means, rot, cl, C, hkind, p_edge, seed, x.dtype)
+        y = _weighted_bands(means, rot, cl, C, hkind, p_edge, seed, x.dtype,
+                            conn=conn)
     y = jnp.broadcast_to(y[:, None], (Cl, Dev) + dims)
     return y.reshape(x.shape).astype(x.dtype)
 
 
-def _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed):
+def _mix_H(hkind, C, p_edge, seed, conn):
+    """The (traced) gossip matrix: H, or participation_mixing(H, conn)."""
+    _, _, H = _mixing_cached(hkind, C, p_edge, seed)
+    Hj = jnp.asarray(H, jnp.float32)
+    if conn is None:
+        return Hj
+    return mixing.participation_mixing(Hj, jnp.asarray(conn, jnp.float32))
+
+
+def _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed, conn=None):
     """Masked cluster-sum psum: works for any contiguous layout/axes.
 
     O(C * d_local) temp memory (vs O(R * d) for a gathered dense mix); the
@@ -306,19 +451,17 @@ def _mix_fallback(x, axes, n, C, Dev, hkind, p_edge, seed):
     sums = jax.lax.psum(part, axes)  # (C, *dims) global cluster sums
     means = sums / Dev
     if hkind != "none":
-        _, _, H = _mixing_cached(hkind, C, p_edge, seed)
-        means = jnp.tensordot(jnp.asarray(H, jnp.float32), means,
+        means = jnp.tensordot(_mix_H(hkind, C, p_edge, seed, conn), means,
                               axes=(1, 0))
     return jnp.take(means, cl, axis=0).astype(x.dtype)
 
 
-def _mix_dense_local(x, C, Dev, hkind, p_edge, seed):
+def _mix_dense_local(x, C, Dev, hkind, p_edge, seed, conn=None):
     """No mesh axes: plain structured factorization on the full array."""
     dims = x.shape[1:]
     means = x.astype(jnp.float32).reshape((C, Dev) + dims).mean(axis=1)
     if hkind != "none":
-        _, _, H = _mixing_cached(hkind, C, p_edge, seed)
-        means = jnp.tensordot(jnp.asarray(H, jnp.float32), means,
+        means = jnp.tensordot(_mix_H(hkind, C, p_edge, seed, conn), means,
                               axes=(1, 0))
     y = jnp.broadcast_to(means[:, None], (C, Dev) + dims)
     return y.reshape(x.shape).astype(x.dtype)
@@ -494,7 +637,8 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                              p_edge: float = 0.4, seed: int = 0,
                              wire_dtype: str = "f32",
                              wire_block: int = 1024,
-                             intra_done: bool = False):
+                             intra_done: bool = False,
+                             alive=None, conn=None):
     """Gossip mix where only compact wire-encoded deltas cross the backhaul.
 
     delta: (R_local, *dims) shard-local replica deltas.  Each cluster's
@@ -530,6 +674,20 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     ``mix_local(..., hkind="none")``): the intra reduction is then
     skipped, so the only collectives are the theta-scaled band rotations.
 
+    ``alive`` / ``conn``: participation masks with the same semantics as
+    ``mix_local`` (DESIGN.md §Degraded-mode contract) — ``alive``
+    renormalizes the intra mean to live devices (ignored when
+    ``intra_done=True`` rows are already masked means), ``conn`` applies
+    ``participation_mixing`` to the gossip: a partitioned sender's
+    decoded contribution is zeroed (conn is replicated, so the source
+    mask is indexed, never rotated — partial-plan zero-fill and
+    partitions cannot be conflated), its weight is absorbed into the
+    receiver's self term, and a partitioned receiver keeps its own mean.
+    All-ones masks are bit-for-bit the unmasked path, except a TRACED
+    all-ones conn on a cluster_theta mix that includes a dense-fallback
+    level (<= 1 ulp — see ``_conn_or_none``; concrete all-ones masks and
+    fault-free ``conn=None`` rounds are exempt by construction).
+
     Multi-axis replica dims lower to flat-index rotations
     (``_rotate_flat``) when the (C, Dev) layout is aligned; a cluster
     spanning a shard group that does not divide the innermost axis falls
@@ -541,6 +699,12 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     """
     axes = _axes_tuple(axes)
     C, Dev = clusters, dev
+    conn = _conn_or_none(conn)
+    if alive is not None and not intra_done:
+        # premultiplied rows make every downstream mean the live-device
+        # mean through the UNCHANGED unmasked graph (see
+        # ``_alive_premultiply`` — bitwise identity at all-alive).
+        delta = _alive_premultiply(delta, alive)
     if hkind == "none":
         return mix_local(delta, clusters=C, dev=Dev, axes=axes, hkind="none")
 
@@ -581,7 +745,7 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
         # (and ships exactly its bytes).  intra_done rows keep the group
         # machinery (mix_local would re-run the intra reduction).
         return mix_local(delta, clusters=C, dev=Dev, axes=axes, hkind=hkind,
-                         p_edge=p_edge, seed=seed)
+                         p_edge=p_edge, seed=seed, conn=conn)
     wire_kw = dict(wb=wb, wire_dtype=wire_dtype,
                    dense_dtype=delta.dtype)
     f32 = delta.astype(jnp.float32)
@@ -593,7 +757,7 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
             plans = _wire_plans(cluster_theta, **plan_kw)
         y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind,
                              p_edge, seed, rotate=_roll_rows(C),
-                             plans=plans, **wire_kw)
+                             plans=plans, conn=conn, **wire_kw)
         y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
 
@@ -628,13 +792,13 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                 return _rotate(t, axes[0], o * g, n, src=src)
 
             y = _sparse_mix_rows(mean, mean, cl, C, hkind, p_edge, seed,
-                                 rot, plans=plans, **wire_kw)
+                                 rot, plans=plans, conn=conn, **wire_kw)
             y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
             return y.astype(delta.dtype)
         return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
                                 hkind, p_edge, seed, plans=plans,
                                 cluster_theta=cluster_theta,
-                                plan_kw=plan_kw,
+                                plan_kw=plan_kw, conn=conn,
                                 **wire_kw).reshape(delta.shape).astype(
                                     delta.dtype)
 
@@ -665,20 +829,21 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                                              axis=0), r_q1, r_q)
 
         y = _sparse_mix_rows(means, means, cl, C, hkind, p_edge, seed, rot,
-                             plans=plans, **wire_kw)
+                             plans=plans, conn=conn, **wire_kw)
         y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
 
     return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
                             p_edge, seed, plans=plans,
                             cluster_theta=cluster_theta, plan_kw=plan_kw,
+                            conn=conn,
                             **wire_kw).reshape(delta.shape).astype(
                                 delta.dtype)
 
 
 def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
                      *, plans, wb, wire_dtype, dense_dtype,
-                     cluster_theta=None, plan_kw=None):
+                     cluster_theta=None, plan_kw=None, conn=None):
     """Misaligned (C, Dev) layouts: masked psum of the dense cluster means,
     then the sparse operator applied LOCALLY (encode/decode round-trip on
     the neighbor terms).  Math identical to the structured paths; wire
@@ -698,12 +863,13 @@ def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
     y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind, p_edge,
                          seed, rotate=_roll_rows(C), plans=plans,
                          wb=wb, wire_dtype=wire_dtype,
-                         dense_dtype=dense_dtype)
+                         dense_dtype=dense_dtype, conn=conn)
     return jnp.take(y, cl, axis=0)
 
 
 def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
-                     rotate, *, plans, wb, wire_dtype, dense_dtype):
+                     rotate, *, plans, wb, wire_dtype, dense_dtype,
+                     conn=None):
     """Shared core: encode rows per wire plan, rotate each plan's payload
     per band (partial perms for per-cluster level groups), decode, sum.
 
@@ -712,6 +878,14 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
     shipping only from the static sender set ``src`` (None = all);
     plans: [(("wire", k_b) | ("dense",), src)] from ``_wire_plans`` — a
     ("dense",) plan ships the rows uncompressed in ``dense_dtype``.
+
+    ``conn``: (C,) replicated backhaul mask.  The band-o source conn at
+    receiver c is ``conn[(c - o) % C]`` — INDEXED, never rotated, so
+    a partial plan's ppermute zero-fill (plan non-membership) stays
+    disjoint from partition zeroing; decoded contributions are scaled by
+    the source conn (zero-filled rows stay zero either way), the lost
+    band weight is absorbed into the self term once per band, and a
+    partitioned receiver keeps its own mean.
     """
     m, L = means.shape
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
@@ -724,13 +898,25 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
                 means, key[1], wire_block=wb, wire_dtype=wire_dtype)),
                 key[1], src))
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
+    cw = None if conn is None else jnp.asarray(conn, jnp.float32)
     y = take(diag)[:, None] * self_dense
+    absorbed = None
     for o, coef in sorted(bands.items()):
+        c_o = None if cw is None else jnp.take(cw, (cl - o) % C)
         for payload, k_b, src in payloads:
             moved = rotate(payload, o, src)
             if k_b is None:
                 dec = moved[0].astype(jnp.float32)
             else:
                 dec = wire_decode(Wire(*moved), L, wire_block=wb)
+            if c_o is not None:
+                dec = c_o[:, None] * dec
             y = y + take(coef)[:, None] * dec
+        if c_o is not None:
+            a_o = take(coef) * (1.0 - c_o)
+            absorbed = a_o if absorbed is None else absorbed + a_o
+    if cw is not None and absorbed is not None:
+        ab = absorbed[:, None]
+        y = jnp.where(ab > 0, y + ab * self_dense, y)
+        y = jnp.where(jnp.take(cw, cl)[:, None] > 0, y, self_dense)
     return y

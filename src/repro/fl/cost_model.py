@@ -36,9 +36,22 @@ def wire_fraction(theta, *, wire_dtype=None, wire_block=1024, dense_bits=16):
                                 dense_bits=dense_bits), 1.0)
 
 
+def per_device_time(rho, theta, mu, nu, tau, *, wire_dtype=None,
+                    wire_block=1024, dense_bits=16):
+    """Per-device wall time of one edge round: rho*tau*mu + eff(theta)*nu.
+
+    The single source of truth for the per-device term — ``round_time``
+    aggregates it, and ``runtime/chaos.FaultPlan`` feeds it to the
+    straggler-deadline check (a device slower than slack * the live
+    quantile misses the round)."""
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    return rho * tau * mu + eff * nu
+
+
 def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
                gossip=False, wire_dtype=None, wire_block=1024,
-               dense_bits=16):
+               dense_bits=16, alive=None, conn=None):
     """Expected wall time of one edge round.
 
     Per device: rho*tau*mu + eff(theta)*nu; per cluster: max over its
@@ -49,23 +62,43 @@ def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
     max over its devices — sender-sized edges, core/round.py), so a
     low-level cluster finishes its send early instead of being charged
     the global max level.  Returns (round_time, per_cluster_times) with
-    the backhaul term folded into per_cluster_times."""
+    the backhaul term folded into per_cluster_times.
+
+    Degraded mode (``runtime/chaos``): ``alive`` is a (N,) 0/1 device
+    mask — the round only waits for devices that made the deadline, so
+    dropped stragglers cost nothing (that is the POINT of dropping them);
+    a fully dead cluster contributes 0.  ``conn`` is a (C,) 0/1 backhaul
+    mask — a partitioned cluster skips its gossip transfer."""
     eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
                         dense_bits=dense_bits)
     per_dev = rho * tau * mu + eff * nu
     m = int(cluster_of.max()) + 1
-    per_cluster = np.array([per_dev[cluster_of == i].max() for i in range(m)])
+    live = (np.ones(len(per_dev), bool) if alive is None
+            else np.asarray(alive, bool))
+    per_cluster = np.array([
+        per_dev[(cluster_of == i) & live].max(initial=0.0) for i in range(m)])
     if gossip:
-        eff_c = (np.array([eff[cluster_of == i].max() for i in range(m)])
+        eff_c = (np.array([eff[(cluster_of == i) & live].max(initial=0.0)
+                           for i in range(m)])
                  if wire_dtype else np.ones(m))
+        if conn is not None:
+            eff_c = eff_c * np.asarray(conn, np.float64)
         per_cluster = per_cluster + float(backhaul) * eff_c
     t = float(per_cluster.max())
     return t, per_cluster
 
 
 def round_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
-                 wire_block=1024, dense_bits=16):
-    """Expected total energy of one edge round (sum over devices)."""
+                 wire_block=1024, dense_bits=16, alive=None):
+    """Expected total energy of one edge round (sum over devices).
+
+    ``alive`` (degraded mode): dropped devices are not charged — an
+    exogenously-unavailable device never ran, and a deadline-dropped
+    straggler's partial work is noise next to the budget scale (its
+    pending update rides the error feedback, not the wire)."""
     eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
                         dense_bits=dense_bits)
-    return float(np.sum(rho * tau * alpha + p * eff * nu))
+    e = rho * tau * alpha + p * eff * nu
+    if alive is not None:
+        e = e * np.asarray(alive, np.float64)
+    return float(np.sum(e))

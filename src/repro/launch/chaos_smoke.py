@@ -1,0 +1,168 @@
+"""CI chaos smoke: seeded fault injection on the smollm train cell.
+
+    PYTHONPATH=src python -m repro.launch.chaos_smoke --rounds 12
+
+Runs the smoke-sized smollm round step on the host FL topology three
+times — fault-free, chaotic (20% dropout + partitions + coordinator
+churn), and a chaotic REPLAY with the same seed — and exits nonzero
+unless every degraded-mode contract holds (DESIGN.md §Degraded-mode):
+
+  * the chaotic run completes with finite losses and finite params
+    (graceful degradation, never NaN poisoning);
+  * the replay is bit-identical (same seed => same fault trace => same
+    final params — restores and reruns are debuggable);
+  * participation is reported every round and actually degrades;
+  * a forced fully-partitioned, fully-dropped cluster keeps its model
+    bit-for-bit while its error feedback absorbs the pending updates;
+  * the chaotic final loss stays within --loss-tol (default 5%) of the
+    fault-free run at equal rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.round import init_state, make_round_step
+from repro.dist.collectives import participation_weights
+from repro.fl.cost_model import per_device_time
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.runtime.chaos import ChaosConfig, FaultPlan
+
+
+def _finite_tree(t) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(t))
+
+
+def _run(cfg, hcef, topo, rounds, chaos_cfg, het, seed=0):
+    """One training cell; returns (state, losses, participations)."""
+    R = topo.num_devices
+    C, Dev = topo.clusters, topo.devices_per_cluster
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(seed))
+    plan = (FaultPlan(chaos_cfg, R, C) if chaos_cfg is not None else None)
+    steps = {g: jax.jit(make_round_step(cfg, hcef, topo, gossip=g))
+             for g in (True, False)}
+    rng = np.random.default_rng(seed)
+    losses, parts = [], []
+    for rnd in range(rounds):
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (R * hcef.tau * 2, 32)))}
+        keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
+        gossip = (rnd + 1) % hcef.q == 0
+        rho = jnp.ones(R)
+        theta = jnp.full(R, 0.3)
+        reports = het.sample_round(rnd)
+        if plan is not None:
+            faults = plan.step(
+                rnd, gossip_round=gossip,
+                per_device_time=per_device_time(
+                    np.ones(R), np.full(R, 0.3), reports.mu, reports.nu,
+                    hcef.tau))
+            parts.append(faults.participation)
+            alive, conn = faults.alive, faults.cluster_conn
+            if not alive.all() or not conn.all():
+                aw = participation_weights(alive, clusters=C, dev=Dev)
+                state, m = steps[gossip](
+                    state, batch, rho, theta, keys,
+                    jnp.asarray(alive, jnp.float32),
+                    jnp.asarray(aw, jnp.float32),
+                    jnp.asarray(conn, jnp.float32))
+            else:
+                state, m = steps[gossip](state, batch, rho, theta, keys)
+        else:
+            state, m = steps[gossip](state, batch, rho, theta, keys)
+        loss = float(m["loss"].mean())
+        losses.append(loss)
+        tag = f" part={parts[-1]:.2f}" if plan is not None else ""
+        print(f"  round {rnd:2d} loss={loss:7.4f}{tag}", flush=True)
+    return state, losses, parts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--dropout", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loss-tol", type=float, default=0.05,
+                    help="max fractional final-loss gap vs fault-free")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+    het = HeterogeneityModel(num_devices=topo.num_devices, seed=args.seed)
+    chaos = ChaosConfig(seed=args.seed, dropout_prob=args.dropout,
+                        partition_prob=0.2, partition_recover_prob=0.5,
+                        coordinator_fail_prob=0.3)
+    failures = []
+
+    print("fault-free run:")
+    s_ref, l_ref, _ = _run(cfg, hcef, topo, args.rounds, None, het)
+    print("chaos run:")
+    s_ch, l_ch, parts = _run(cfg, hcef, topo, args.rounds, chaos, het)
+    print("chaos replay:")
+    s_rp, l_rp, parts_rp = _run(cfg, hcef, topo, args.rounds, chaos, het)
+
+    # 1. graceful degradation: everything finite
+    if not (_finite_tree(s_ch.params) and _finite_tree(s_ch.ef)
+            and np.all(np.isfinite(l_ch))):
+        failures.append("NaN/inf in chaotic run")
+    # 2. deterministic replay, bit for bit
+    for a, b in zip(jax.tree.leaves(s_ch.params), jax.tree.leaves(s_rp.params)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            failures.append("chaos replay is not bit-identical")
+            break
+    if parts != parts_rp:
+        failures.append("fault trace replay diverged")
+    # 3. participation reported and actually exercised
+    if len(parts) != args.rounds:
+        failures.append("participation missing for some rounds")
+    if not any(p < 1.0 for p in parts):
+        failures.append(f"dropout={args.dropout} never dropped a device "
+                        f"(seed too lucky? trace broken?)")
+    # 4. a dead, partitioned cluster keeps its model exactly
+    R, C, Dev = topo.num_devices, topo.clusters, topo.devices_per_cluster
+    state0 = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    step = jax.jit(make_round_step(cfg, hcef, topo, gossip=True))
+    alive = np.array([1, 1, 0, 0], np.float32)
+    batch = {"tokens": jnp.asarray(np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (R * hcef.tau * 2, 32)))}
+    s_dead, _ = step(state0, batch, jnp.ones(R), jnp.full(R, 0.3),
+                     jax.random.split(jax.random.PRNGKey(3), R),
+                     jnp.asarray(alive),
+                     jnp.asarray(participation_weights(
+                         alive, clusters=C, dev=Dev)),
+                     jnp.asarray([1.0, 0.0], jnp.float32))
+    for p0, p1, e1 in zip(jax.tree.leaves(state0.params),
+                          jax.tree.leaves(s_dead.params),
+                          jax.tree.leaves(s_dead.ef)):
+        if not np.array_equal(np.asarray(p0)[Dev:], np.asarray(p1)[Dev:]):
+            failures.append("partitioned dead cluster did not keep its model")
+            break
+    if all(float(jnp.abs(e[Dev:]).max()) == 0.0
+           for e in jax.tree.leaves(s_dead.ef)):
+        failures.append("dropped devices' EF did not absorb their updates")
+    # 5. equal-rounds loss gap
+    gap = abs(l_ch[-1] - l_ref[-1]) / max(abs(l_ref[-1]), 1e-9)
+    print(f"final loss: fault-free={l_ref[-1]:.4f} chaos={l_ch[-1]:.4f} "
+          f"gap={100 * gap:.2f}% (tol {100 * args.loss_tol:.0f}%)  "
+          f"mean participation={np.mean(parts):.2f}")
+    if gap > args.loss_tol:
+        failures.append(f"loss gap {100 * gap:.2f}% exceeds tolerance")
+
+    if failures:
+        for f in failures:
+            print(f"CHAOS SMOKE FAIL: {f}", file=sys.stderr)
+        return 1
+    print("chaos smoke: all degraded-mode contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,7 @@ from repro.fl.cost_model import round_energy, round_time
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.runtime.checkpoint import save_pytree
+from repro.runtime.chaos import ChaosConfig, FaultPlan, controls_on_live
 
 
 def main():
@@ -50,6 +51,13 @@ def main():
                     help="route gossip through the theta-scaled wire path")
     ap.add_argument("--wire-dtype", default=None,
                     choices=["f32", "bf16", "int8"])
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault injection: device dropout, deadline "
+                         "misses, cluster partitions, coordinator churn")
+    ap.add_argument("--chaos-dropout", type=float, default=0.2)
+    ap.add_argument("--chaos-partition", type=float, default=0.1)
+    ap.add_argument("--chaos-coord-fail", type=float, default=0.2)
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     bundle = get_config(args.arch)
@@ -102,6 +110,14 @@ def main():
         phi=max(args.rounds // hcef.q, 1), q=hcef.q,
         backhaul_time=het.backhaul_time())
 
+    plan = None
+    if args.chaos:
+        plan = FaultPlan(ChaosConfig(
+            seed=args.chaos_seed, dropout_prob=args.chaos_dropout,
+            partition_prob=args.chaos_partition,
+            coordinator_fail_prob=args.chaos_coord_fail),
+            num_devices=R, num_clusters=topo.clusters)
+
     corpus = synthetic_tokens(cfg.vocab_size, n_seq=32,
                               seq_len=args.seq + 1, n_devices=R, beta=0.5)
     rng = np.random.default_rng(0)
@@ -114,7 +130,12 @@ def main():
         for rnd in range(args.rounds):
             t0 = time.time()
             reports = het.sample_round(rnd)
-            rho, theta = controller.controls(reports, budget)
+            if plan is not None:
+                alive0 = plan.sample_available(rnd)
+                rho, theta = controls_on_live(controller, reports, budget,
+                                              alive0)
+            else:
+                rho, theta = controller.controls(reports, budget)
             gossip_round = (rnd + 1) % hcef.q == 0
             cluster_levels = None
             if hcef.sparse_gossip:
@@ -133,20 +154,48 @@ def main():
             batch = {"tokens": jnp.asarray(np.concatenate(
                 [corpus[d, idx[d]] for d in range(R)]))}
             keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
-            fn = get_step(gossip_round, cluster_levels)
-            state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
-                          jnp.asarray(theta, jnp.float32), keys)
             # dense_bits=16: het's model_bits above is n_params * 16 (bf16).
             wire_kw = (dict(wire_dtype=hcef.wire_dtype,
                             wire_block=hcef.wire_block, dense_bits=16)
                        if hcef.sparse_gossip else {})
+            faults = None
+            alive = conn = None
+            if plan is not None:
+                from repro.fl.cost_model import per_device_time
+                faults = plan.step(
+                    rnd, gossip_round=gossip_round,
+                    per_device_time=per_device_time(
+                        rho, theta, reports.mu, reports.nu, hcef.tau,
+                        **wire_kw),
+                    alive=alive0)
+                alive, conn = faults.alive, faults.cluster_conn
+            fn = get_step(gossip_round, cluster_levels)
+            degraded = faults is not None and (not alive.all()
+                                               or not conn.all())
+            if degraded:
+                from repro.dist.collectives import participation_weights
+                aw = participation_weights(
+                    alive, clusters=topo.clusters,
+                    dev=topo.devices_per_cluster)
+                state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
+                              jnp.asarray(theta, jnp.float32), keys,
+                              jnp.asarray(alive, jnp.float32),
+                              jnp.asarray(aw, jnp.float32),
+                              jnp.asarray(conn, jnp.float32))
+            else:
+                # fault-free rounds take the EXACT unmasked trace (bitwise
+                # contract: chaos at zero faults == no chaos).
+                state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
+                              jnp.asarray(theta, jnp.float32), keys)
             t, _ = round_time(rho, theta, reports.mu, reports.nu, hcef.tau,
                               np.repeat(np.arange(topo.clusters),
                                         topo.devices_per_cluster),
                               gossip=gossip_round,
-                              backhaul=het.backhaul_time(), **wire_kw)
+                              backhaul=het.backhaul_time(),
+                              alive=alive, conn=conn, **wire_kw)
             e = round_energy(rho, theta, reports.mu, reports.nu,
-                             reports.alpha, reports.p, hcef.tau, **wire_kw)
+                             reports.alpha, reports.p, hcef.tau,
+                             alive=alive, **wire_kw)
             budget.time_spent_this += t
             budget.energy_spent_this += e
             budget.r += 1
@@ -156,10 +205,16 @@ def main():
                 budget.time_spent_this = budget.energy_spent_this = 0.0
                 budget.r = 0
                 budget.l += 1
+            chaos_str = ""
+            if faults is not None:
+                chaos_str = (f" part={faults.participation:.2f} "
+                             f"coord={faults.coordinator}"
+                             + (f" cut={int((~faults.cluster_conn).sum())}"
+                                if not faults.cluster_conn.all() else ""))
             print(f"round {rnd:3d} loss={float(m['loss'].mean()):7.4f} "
                   f"rho={np.mean(rho):.2f} theta={np.mean(theta):.2f} "
                   f"sim_t={budget.time_spent_prev + budget.time_spent_this:9.0f}s "
-                  f"wall={time.time()-t0:5.1f}s")
+                  f"wall={time.time()-t0:5.1f}s" + chaos_str)
             if args.ckpt_dir:
                 save_pytree(Path(args.ckpt_dir) / f"ckpt_{rnd:06d}.npz",
                             state._asdict(), meta={"round": rnd})

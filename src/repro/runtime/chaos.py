@@ -1,0 +1,239 @@
+"""Fault injection for the round engine: seeded per-round availability traces.
+
+HCEF's premise is *dynamic* heterogeneity, so device dropout, backhaul
+partitions and coordinator churn are the normal case, not the exception
+(arXiv:2205.13054, arXiv:2012.11804).  ``FaultPlan`` turns that into a
+first-class input to the round step: each round it produces a
+``RoundFaults`` record —
+
+  * ``alive``        (R,) device liveness: exogenous i.i.d. dropout plus
+                     DEADLINE MISSES (the cost model's per-device round
+                     times vs ``failover.straggler_deadline`` over the
+                     live devices, scaled by ``deadline_slack``);
+  * ``cluster_conn`` (C,) backhaul connectivity: whole-cluster partitions
+                     with Markov fail/recover dynamics (a partitioned
+                     cluster skips gossip, keeps its intra model, and
+                     mixes stale-by-1 when it reconnects);
+  * ``coordinator``  the elected coordinator from the embedded
+                     ``CoordinatorRegistry`` (same fail/recover model).
+
+Everything is seeded and replayable: the exogenous draws are keyed by
+(seed, round_idx) so a restored run re-generates the identical trace, and
+the Markov state (partitions, registry, rng) round-trips through
+``state_dict``/``load_state_dict`` for checkpointing.
+
+The aggregation-side semantics of the masks (live-count renormalization,
+EF carry-forward for dropped devices, partition staleness) live in
+``core/round``, ``dist/collectives`` and ``runtime/driver`` — see
+DESIGN.md §Degraded-mode contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.controller import DeviceReports
+from repro.runtime.failover import CoordinatorRegistry, straggler_deadline
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Knobs of one fault-injection scenario (all probabilities per round)."""
+
+    seed: int = 0
+    # -- device dropout --
+    dropout_prob: float = 0.0       # exogenous i.i.d. device unavailability
+    deadline_quantile: float = 0.9  # straggler deadline over LIVE devices
+    deadline_slack: float = 1.5     # drop devices slower than slack*deadline
+    # -- cluster backhaul partitions (Markov fail/recover) --
+    partition_prob: float = 0.0
+    partition_recover_prob: float = 0.5
+    # -- coordinator churn (failover.CoordinatorRegistry) --
+    coordinator_servers: int = 3
+    coordinator_fail_prob: float = 0.0
+    coordinator_recover_prob: float = 0.5
+    # -- degraded-mode contract checking (tests / chaos smoke) --
+    verify_conservation: bool = False
+
+    def __post_init__(self):
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(f"dropout_prob {self.dropout_prob}")
+        if self.deadline_slack < 1.0:
+            raise ValueError(  # slack < 1 would drop the quantile device
+                f"deadline_slack {self.deadline_slack} must be >= 1")
+        if self.coordinator_servers < 1:
+            raise ValueError("need at least one coordinator server")
+
+
+@dataclass
+class RoundFaults:
+    """One round's availability trace (numpy, host-side)."""
+
+    alive: np.ndarray          # (R,) bool — device made the deadline
+    cluster_conn: np.ndarray   # (C,) bool — backhaul link up
+    coordinator: int
+    deadline: float            # seconds (inf when no per-device times given)
+    n_deadline_missed: int
+
+    @property
+    def participation(self) -> float:
+        return float(np.mean(self.alive))
+
+
+class FaultPlan:
+    """Seeded per-round fault generator over R devices / C clusters."""
+
+    def __init__(self, cfg: ChaosConfig, num_devices: int,
+                 num_clusters: int):
+        self.cfg = cfg
+        self.R = int(num_devices)
+        self.C = int(num_clusters)
+        self.registry = CoordinatorRegistry(
+            num_servers=cfg.coordinator_servers,
+            fail_prob=cfg.coordinator_fail_prob,
+            recover_prob=cfg.coordinator_recover_prob, seed=cfg.seed)
+        self.partitioned: set = set()
+        # Markov partition dynamics get their own stream; the i.i.d. device
+        # dropout is keyed by (seed, round) so it is stateless/replayable.
+        self.rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 0xC1A0]))
+
+    # ------------------------------------------------------------------
+    def sample_available(self, round_idx: int) -> np.ndarray:
+        """Exogenous (pre-controller) device availability for this round.
+
+        Drawn i.i.d. from a (seed, round_idx)-keyed stream, so the trace
+        is a pure function of the round index (deterministic replay, and
+        checkpoint restores need no extra state for it).  Guarded: at
+        least one device is always kept alive — an all-dead round cannot
+        make progress and would leave the quantile deadline undefined."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, round_idx, 0xD0]))
+        alive = rng.random(self.R) >= self.cfg.dropout_prob
+        if not alive.any():
+            alive[int(rng.integers(self.R))] = True
+        return alive
+
+    # ------------------------------------------------------------------
+    def step(self, round_idx: int, *, gossip_round: bool = False,
+             per_device_time: Optional[np.ndarray] = None,
+             alive: Optional[np.ndarray] = None) -> RoundFaults:
+        """Advance the Markov faults one round and fold in deadline misses.
+
+        ``alive``: the exogenous availability (from ``sample_available``;
+        re-drawn here when omitted).  ``per_device_time``: the cost
+        model's per-device round times under the chosen controls — devices
+        slower than ``deadline_slack *`` the live-quantile deadline miss
+        the round and are dropped ON TOP of the exogenous mask.  The
+        quantile device itself always survives (slack >= 1), so a round
+        with any live device keeps at least one."""
+        if alive is None:
+            alive = self.sample_available(round_idx)
+        alive = np.asarray(alive, bool).copy()
+        deadline = float(np.inf)
+        n_missed = 0
+        if per_device_time is not None and alive.any():
+            t = np.asarray(per_device_time, np.float64)
+            deadline = straggler_deadline(t, 1,
+                                          self.cfg.deadline_quantile,
+                                          alive=alive)
+            missed = alive & (t > self.cfg.deadline_slack * deadline)
+            n_missed = int(missed.sum())
+            alive &= ~missed
+        if not alive.any():  # belt-and-braces: never an all-dead round
+            keep = (int(np.argmin(per_device_time))
+                    if per_device_time is not None else 0)
+            alive[keep] = True
+
+        # cluster backhaul partitions only evolve on gossip rounds (the
+        # link is unused between them; keeping the chain gossip-clocked
+        # makes partition_prob interpretable as per-gossip-round).
+        if gossip_round:
+            for c in range(self.C):
+                if c in self.partitioned:
+                    if self.rng.random() < self.cfg.partition_recover_prob:
+                        self.partitioned.discard(c)
+                elif self.rng.random() < self.cfg.partition_prob:
+                    self.partitioned.add(c)
+        conn = np.array([c not in self.partitioned for c in range(self.C)],
+                        bool)
+        coord = self.registry.step()
+        return RoundFaults(alive=alive, cluster_conn=conn, coordinator=coord,
+                           deadline=deadline, n_deadline_missed=n_missed)
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict:
+        return {"partitioned": sorted(self.partitioned),
+                "rng": self.rng.bit_generator.state,
+                "registry": self.registry.state_dict()}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self.partitioned = set(int(c) for c in state["partitioned"])
+        self.rng.bit_generator.state = state["rng"]
+        self.registry.load_state_dict(state["registry"])
+
+
+def controls_on_live(controller, reports, budget, alive):
+    """Solve P2.1 over the LIVE subset only (degraded-mode controller).
+
+    A dead device must neither constrain the allowance the survivors
+    optimize against nor receive real controls — it runs nothing.  Dead
+    entries get the controller's (rho_min, theta_min) floors so the
+    returned (N,) arrays stay well-defined for logging/cost code (the
+    cost model charges live devices only regardless).  With an all-alive
+    mask this is EXACTLY ``controller.controls`` (same call, same rng-free
+    math), keeping the fault-free path byte-identical."""
+    alive = np.asarray(alive, bool)
+    if alive.all():
+        return controller.controls(reports, budget)
+    live = np.flatnonzero(alive)
+    sub = DeviceReports(
+        sigma2=np.asarray(reports.sigma2)[live],
+        G2=np.asarray(reports.G2)[live],
+        mu=np.asarray(reports.mu)[live],
+        alpha=np.asarray(reports.alpha)[live],
+        nu=np.asarray(reports.nu)[live],
+        p=np.asarray(reports.p)[live])
+    rho_l, theta_l = controller.controls(sub, budget)
+    rho = np.full(alive.size, controller.rho_min, np.float64)
+    theta = np.full(alive.size, controller.theta_min, np.float64)
+    rho[live] = np.asarray(rho_l, np.float64)
+    theta[live] = np.asarray(theta_l, np.float64)
+    return rho, theta
+
+
+def fold_dropped_updates(comp, ef_new, alive):
+    """Participation-masked compression outputs with EF carry-forward.
+
+    ``comp``/``ef_new``: the compression operator's exact split of each
+    device's (delta + ef_old) — ``comp + ef_new == delta + ef_old``
+    (``core.compression.compress_delta``'s tested invariant).  A dropped
+    device's update never reaches the aggregator, but it must not be
+    SILENTLY lost either: its whole split is folded back into its error
+    feedback (theta -> 0 compression, the same EF-folding invariant
+    ``runtime/elastic.resize_state`` applies to departing devices), so
+
+        contribution + ef_out == delta + ef_old      (every device)
+
+    holds exactly — contribution = comp for live devices and 0 for dropped
+    ones, ef_out = ef_new for live and comp + ef_new for dropped.  The
+    selection is a pure where (no arithmetic on live devices), so an
+    all-alive mask is bit-for-bit the identity.
+
+    ``alive``: (R,) mask (traced jnp ok).  Returns (contribution, ef_out)
+    pytrees shaped like the inputs."""
+    import jax
+    import jax.numpy as jnp
+
+    def per_leaf(c, e):
+        a = jnp.asarray(alive, bool).reshape(
+            (c.shape[0],) + (1,) * (c.ndim - 1))
+        return jnp.where(a, c, jnp.zeros_like(c)), jnp.where(a, e, c + e)
+
+    out = jax.tree.map(per_leaf, comp, ef_new)
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=lambda t:
+                         isinstance(t, tuple)),
+            jax.tree.map(lambda t: t[1], out, is_leaf=lambda t:
+                         isinstance(t, tuple)))

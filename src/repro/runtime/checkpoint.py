@@ -1,18 +1,37 @@
 """Mesh-agnostic checkpointing: save logical arrays, reshard on restore.
 
-Checkpoints are plain ``.npz`` (pytree flattened by key path) + a JSON
-sidecar with step counters, controller/budget state and RNG.  Restore works
-onto any mesh/topology (arrays are logical/global), which is what enables
-elastic scaling (runtime/elastic.py) and restart-on-failure.
+Checkpoints are plain ``.npz`` (pytree flattened by key path) with the
+JSON metadata (step counters, controller/budget state, RNG) EMBEDDED in
+the archive (``__meta_json__``), so arrays + meta are one atomic unit; a
+sidecar ``.meta.json`` is also written for human inspection but is not
+authoritative.  Restore works onto any mesh/topology (arrays are
+logical/global), which is what enables elastic scaling
+(runtime/elastic.py) and restart-on-failure.
+
+Crash safety: writes go to a hidden temp file in the target directory,
+are fsynced, then ``os.replace``d over the destination — a kill at ANY
+point leaves either the old complete checkpoint or the new complete one,
+never a torn file.  A checkpoint that is nevertheless unreadable (torn
+by an unsafe writer, disk corruption) raises ``CheckpointError`` instead
+of an arbitrary decoder exception, so restart logic can fall back to the
+previous checkpoint deliberately.
 """
 from __future__ import annotations
 
 import json
+import os
+import zipfile
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+META_KEY = "__meta_json__"
+
+
+class CheckpointError(RuntimeError):
+    """The checkpoint file is unreadable (torn write / corruption)."""
 
 
 def _path_str(path) -> str:
@@ -29,18 +48,41 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _atomic_write(path: Path, write_fn) -> None:
+    """write_fn(tmp_path); then fsync + rename into place."""
+    tmp = path.parent / f".{path.name}.tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        with open(tmp, "rb+") as f:
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if tmp.exists():
+            tmp.unlink()
+
+
 def save_pytree(path: Path, tree: Any, meta: Optional[Dict] = None) -> None:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
     for kp, leaf in flat:
-        arrays[_path_str(kp)] = np.asarray(jax.device_get(leaf))
-    tmp = path.with_suffix(".tmp.npz")
-    np.savez(tmp, **arrays)
-    tmp.rename(path)  # atomic-ish: never leaves a torn checkpoint behind
+        key = _path_str(kp)
+        if key == META_KEY:
+            raise ValueError(f"pytree key collides with {META_KEY!r}")
+        arrays[key] = np.asarray(jax.device_get(leaf))
     if meta is not None:
-        path.with_suffix(".meta.json").write_text(json.dumps(meta, indent=1))
+        # embedded with the arrays: one atomic rename covers both
+        arrays[META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+    def _write_npz(tmp):
+        with open(tmp, "wb") as f:  # file handle: np.savez would append
+            np.savez(f, **arrays)   # ".npz" to a bare temp filename
+    _atomic_write(path, _write_npz)
+    if meta is not None:  # human-readable sidecar (not authoritative)
+        _atomic_write(path.with_suffix(".meta.json"),
+                      lambda tmp: tmp.write_text(json.dumps(meta, indent=1)))
 
 
 def load_pytree(path: Path, template: Any,
@@ -50,22 +92,42 @@ def load_pytree(path: Path, template: Any,
     If ``shardings`` (same-structure tree of NamedSharding) is given the
     arrays are device_put with those shardings (resharding onto any mesh)."""
     path = Path(path)
-    with np.load(path) as data:
-        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-        leaves = []
-        for kp, leaf in flat:
-            key = _path_str(kp)
-            arr = data[key]
-            assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
-                                                           leaf.shape)
-            leaves.append(arr.astype(leaf.dtype))
+    meta = None
+    try:
+        with np.load(path) as data:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+            leaves = []
+            for kp, leaf in flat:
+                key = _path_str(kp)
+                if key not in data:
+                    raise CheckpointError(
+                        f"{path}: missing array {key!r} (torn or "
+                        f"incompatible checkpoint)")
+                arr = data[key]
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    raise CheckpointError(
+                        f"{path}: array {key!r} has shape {arr.shape}, "
+                        f"expected {tuple(leaf.shape)}")
+                leaves.append(arr.astype(leaf.dtype))
+            if META_KEY in data:
+                meta = json.loads(bytes(data[META_KEY]).decode())
+    except CheckpointError:
+        raise
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError,
+            KeyError) as e:
+        # np.load surfaces torn/corrupt archives through any of these;
+        # normalize so restart logic can catch ONE exception type and
+        # fall back to the previous checkpoint.
+        raise CheckpointError(f"{path}: unreadable checkpoint ({e})") from e
     tree = jax.tree_util.tree_unflatten(
         treedef, leaves)
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
                             shardings)
-    meta_path = path.with_suffix(".meta.json")
-    meta = json.loads(meta_path.read_text()) if meta_path.exists() else None
+    if meta is None:  # pre-embedding checkpoints: sidecar fallback
+        meta_path = path.with_suffix(".meta.json")
+        meta = (json.loads(meta_path.read_text())
+                if meta_path.exists() else None)
     return tree, meta
 
 
@@ -74,5 +136,6 @@ def latest_checkpoint(ckpt_dir: Path, prefix: str = "ckpt_"
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    cands = sorted(ckpt_dir.glob(f"{prefix}*.npz"))
+    cands = sorted(p for p in ckpt_dir.glob(f"{prefix}*.npz")
+                   if ".tmp" not in p.name)  # never resume a torn temp
     return cands[-1] if cands else None

@@ -27,11 +27,14 @@ from repro.configs.base import HCEFConfig, validate_theta_levels
 from repro.core.compression import (cluster_levels_from_theta,
                                     compress_delta, quantize_theta)
 from repro.core.controller import BudgetState, DeviceReports
-from repro.core.mixing import check_mixing, make_mixing
+from repro.core.mixing import check_mixing, make_mixing, participation_mixing
+from repro.dist.collectives import participation_weights
 from repro.fl.baselines import Controller
-from repro.fl.cost_model import round_energy, round_time
+from repro.fl.cost_model import per_device_time, round_energy, round_time
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.optim.sgd import sgd_update
+from repro.runtime.chaos import (ChaosConfig, FaultPlan, controls_on_live,
+                                 fold_dropped_updates)
 from repro.runtime.checkpoint import load_pytree, save_pytree
 
 
@@ -76,7 +79,7 @@ class FedSim:
                  device_data: List, test_data, controller: Controller,
                  het: HeterogeneityModel,
                  time_budget: float = np.inf, energy_budget: float = np.inf,
-                 phi: int = 10_000):
+                 phi: int = 10_000, chaos: Optional[ChaosConfig] = None):
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -106,6 +109,12 @@ class FedSim:
         self.round = 0
         self.rng = np.random.default_rng(cfg.seed + 1)
         self.history: List[Dict] = []
+        # --- fault injection (runtime/chaos): None = fault-free; rounds
+        # with 100% participation take the EXACT fault-free code path, so
+        # a chaos run with zero fault probabilities is bit-identical.
+        self.fault_plan = (FaultPlan(chaos, N, C)
+                           if chaos is not None else None)
+        self.cluster_staleness = np.zeros(C, np.int64)
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -161,6 +170,28 @@ class FedSim:
             return jax.tree.map(agg, params, comp)
 
         self._aggregate = jax.jit(aggregate)
+
+        def aggregate_masked(params, comp, gossip, alive_w, Hm):
+            """Degraded-mode W: comp is already EF-folded (dropped devices
+            contribute exact zeros), alive_w renormalizes the intra mean to
+            live devices (host-computed participation_weights) and Hm is
+            participation_mixing(H, conn) — a partitioned cluster keeps its
+            own model and mixes stale-by-1 when it reconnects."""
+            def agg(x0_leaf, c_leaf):
+                y = x0_leaf.reshape(C, Dev, *x0_leaf.shape[1:])[:, 0]
+                cw = c_leaf * alive_w.reshape(
+                    (C * Dev,) + (1,) * (c_leaf.ndim - 1))
+                d = cw.reshape(C, Dev, *c_leaf.shape[1:]).mean(axis=1)
+                y = y + d
+                y = jax.lax.cond(
+                    gossip,
+                    lambda yy: jnp.einsum("ij,j...->i...", Hm, yy),
+                    lambda yy: yy, y)
+                y = jnp.broadcast_to(y[:, None], (C, Dev) + y.shape[1:])
+                return y.reshape(C * Dev, *y.shape[2:])
+            return jax.tree.map(agg, params, comp)
+
+        self._aggregate_masked = jax.jit(aggregate_masked)
         self._eval = jax.jit(lambda p, batch: self.acc_fn(p, batch))
         self._avg = jax.jit(lambda p: jax.tree.map(lambda x: x.mean(0), p))
 
@@ -194,8 +225,19 @@ class FedSim:
             reports = dataclasses.replace(
                 reports, sigma2=np.asarray(s2), G2=np.asarray(G2))
 
-        # --- Algorithm 3: coordinator solves P2 ---
-        rho, theta = self.controller.controls(reports, self.budget)
+        # --- fault injection: exogenous availability BEFORE the controller
+        # (P2.1 is solved over the live subset only — a dead device must
+        # not constrain the allowance the survivors optimize against).
+        gossip = (r + 1) % cfg.q == 0
+        alive0 = (self.fault_plan.sample_available(self.round)
+                  if self.fault_plan is not None else None)
+
+        # --- Algorithm 3: coordinator solves P2 (on the live subset) ---
+        if alive0 is not None:
+            rho, theta = controls_on_live(self.controller, reports,
+                                          self.budget, alive0)
+        else:
+            rho, theta = self.controller.controls(reports, self.budget)
         cluster_levels = None
         if cfg.sparse_gossip:
             # static-k contract: the wire only ships grid levels, so the
@@ -220,22 +262,53 @@ class FedSim:
             delta, self.ef, jnp.asarray(theta, jnp.float32),
             block=cfg.block_size, error_feedback=cfg.error_feedback)
 
-        # --- aggregation + gossip (Eq. 5) ---
-        gossip = (r + 1) % cfg.q == 0
-        self.params = self._aggregate(self.params, comp,
-                                      jnp.asarray(gossip))
-
-        # --- cost accounting (Eq. 8/9) ---
+        # --- fault plan: deadline misses + partitions + coordinator ---
         # dense_bits=32: the simulator's params (and HeterogeneityModel's
         # default model_bits) are f32, so the wire ratio is vs 32-bit entries.
         wire_kw = (dict(wire_dtype=cfg.wire_dtype, wire_block=cfg.wire_block,
                         dense_bits=32)
                    if cfg.sparse_gossip else {})
+        faults = None
+        alive = conn = None
+        if self.fault_plan is not None:
+            t_dev = per_device_time(rho, theta, reports.mu, reports.nu,
+                                    cfg.tau, **wire_kw)
+            faults = self.fault_plan.step(self.round, gossip_round=gossip,
+                                          per_device_time=t_dev,
+                                          alive=alive0)
+            alive, conn = faults.alive, faults.cluster_conn
+            if gossip:
+                self.cluster_staleness = np.where(
+                    conn, 0, self.cluster_staleness + 1)
+
+        # --- aggregation + gossip (Eq. 5) ---
+        degraded = faults is not None and (not alive.all()
+                                           or not conn.all())
+        if degraded:
+            # dropped devices: exact-zero contribution, split folded back
+            # into their error feedback (conservation — nothing lost).
+            comp, self.ef = fold_dropped_updates(
+                comp, self.ef, jnp.asarray(alive, bool))
+            aw = participation_weights(alive, clusters=cfg.n_clusters,
+                                       dev=self.dev_per_cluster)
+            Hm = np.asarray(participation_mixing(self.H, conn.astype(
+                np.float32)), np.float32)
+            self.params = self._aggregate_masked(
+                self.params, comp, jnp.asarray(gossip),
+                jnp.asarray(aw, jnp.float32), jnp.asarray(Hm))
+        else:
+            self.params = self._aggregate(self.params, comp,
+                                          jnp.asarray(gossip))
+
+        # --- cost accounting (Eq. 8/9): only live devices are charged,
+        # partitioned clusters skip their backhaul transfer ---
         t_round, _ = round_time(rho, theta, reports.mu, reports.nu, cfg.tau,
                                 self.cluster_of, gossip=gossip,
-                                backhaul=self.het.backhaul_time(), **wire_kw)
+                                backhaul=self.het.backhaul_time(),
+                                alive=alive, conn=conn, **wire_kw)
         e_round = round_energy(rho, theta, reports.mu, reports.nu,
-                               reports.alpha, reports.p, cfg.tau, **wire_kw)
+                               reports.alpha, reports.p, cfg.tau,
+                               alive=alive, **wire_kw)
         b = self.budget
         b.time_spent_this += t_round
         b.energy_spent_this += e_round
@@ -259,6 +332,12 @@ class FedSim:
         }
         if cluster_levels is not None:
             rec["cluster_levels"] = [float(t) for t in cluster_levels]
+        if faults is not None:
+            rec["participation"] = faults.participation
+            rec["n_deadline_missed"] = faults.n_deadline_missed
+            rec["coordinator"] = faults.coordinator
+            rec["n_partitioned"] = int((~faults.cluster_conn).sum())
+            rec["staleness_max"] = int(self.cluster_staleness.max())
         infeas = getattr(self.controller, "diag",
                          {}).get("p21_time_infeasible")
         if infeas is not None:
@@ -300,12 +379,21 @@ class FedSim:
 
     # ----------------------------- fault tolerance --------------------
     def save(self, path: Path):
+        """Complete state: a restore followed by run() is bit-identical to
+        never having stopped (tested in tests/test_fault_tolerance.py) —
+        params/EF/momentum, round index, budget, the np RNG driving batch
+        sampling and PRNG keys, staleness counters and the fault plan's
+        Markov state (partitions + coordinator registry)."""
         state = {"params": self.params, "ef": self.ef}
         if self.mom is not None:
             state["mom"] = self.mom
         meta = {"round": self.round,
                 "budget": dataclasses.asdict(self.budget),
-                "history": self.history}
+                "history": self.history,
+                "rng": self.rng.bit_generator.state,
+                "cluster_staleness": self.cluster_staleness.tolist()}
+        if self.fault_plan is not None:
+            meta["fault_plan"] = self.fault_plan.state_dict()
         save_pytree(path, state, meta)
 
     def restore(self, path: Path):
@@ -319,3 +407,10 @@ class FedSim:
         self.round = meta["round"]
         self.budget = BudgetState(**meta["budget"])
         self.history = meta["history"]
+        if "rng" in meta:  # older checkpoints: keep the fresh stream
+            self.rng.bit_generator.state = meta["rng"]
+        if "cluster_staleness" in meta:
+            self.cluster_staleness = np.asarray(meta["cluster_staleness"],
+                                                np.int64)
+        if self.fault_plan is not None and meta.get("fault_plan"):
+            self.fault_plan.load_state_dict(meta["fault_plan"])

@@ -2,11 +2,18 @@
 
 Checkpoints store logical (R, *shape) arrays; scaling maps them to a new
 R' = clusters' * devices_per_cluster':
-  * growing (R' > R): new devices join their cluster's edge model
-    (replicated from the cluster average) with zero error-feedback — exactly
-    how a fresh device joins CFEL mid-training;
+  * growing (R' >= R): new devices join their cluster's edge model
+    (replicated from the cluster average) with zero error-feedback —
+    exactly how a fresh device joins CFEL mid-training; surviving
+    devices KEEP their pending error feedback (scaled by R'/R so each
+    cluster's post-upload aggregate model + mean-EF is unchanged — the
+    conservation invariant tested in tests/test_fault_tolerance.py);
   * shrinking (R' < R): departing devices' pending error feedback is folded
     back into the cluster average (no update is silently lost).
+
+Either way the global aggregate — the model every cluster would reach if
+all pending EF were uploaded — is preserved exactly, so grow-then-shrink
+round-trips fold EF once instead of dropping it.
 
 Used together with runtime/checkpoint.py for restart-on-resize
 (tests/test_fault_tolerance.py)."""
@@ -56,7 +63,39 @@ def resize_state(params, ef, momentum, old: FLTopology, new: FLTopology
     new_params = jax.tree.map(
         lambda p, e: map_leaf(p, fold_ef=e if shrinking else None),
         params, ef)
-    new_ef = jax.tree.map(lambda e: map_leaf(e, zero_new=True), ef)
+    if shrinking:
+        # EF was folded into the models above; start clean.
+        new_ef = jax.tree.map(lambda e: map_leaf(e, zero_new=True), ef)
+    else:
+        # Surviving devices keep their EF: old device r stays with (a
+        # child/merge of) its original cluster, scaled by R'/R so the
+        # cluster aggregate model + mean-EF is invariant.  Assignment is
+        # host-side (pure gather + mask in the graph).
+        Ro, Rn = Co * Do, Cn * Dn
+        assign = [[] for _ in range(Cn)]
+        for r in range(Ro):
+            co = r // Do
+            if Cn >= Co:
+                k = Cn // Co  # spread co's devices over its k children
+                assign[co * k + ((r % Do) * k) // Do].append(r)
+            else:
+                assign[co // (Co // Cn)].append(r)
+        src = np.zeros(Rn, np.int64)
+        keep = np.zeros(Rn, bool)
+        for cn, rows in enumerate(assign):
+            assert len(rows) <= Dn, (cn, rows, Dn)  # capacity by R' >= R
+            for i, r in enumerate(rows):
+                src[cn * Dn + i] = r
+                keep[cn * Dn + i] = True
+        scale = (Cn * Dn) / (Co * Do)
+
+        def map_ef(e):
+            g = jnp.take(e, jnp.asarray(src), axis=0) * jnp.asarray(
+                scale, e.dtype)
+            m = jnp.asarray(keep).reshape((Rn,) + (1,) * (e.ndim - 1))
+            return jnp.where(m, g, jnp.zeros_like(g)).astype(e.dtype)
+
+        new_ef = jax.tree.map(map_ef, ef)
     new_mom = (jax.tree.map(lambda m: map_leaf(m), momentum)
                if momentum is not None else None)
     return new_params, new_ef, new_mom

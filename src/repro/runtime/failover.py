@@ -5,11 +5,14 @@ is reconstructed from the device reports, so failover = re-election.  We
 model a fleet of edge servers with fail/recover events; the election picks
 the lowest-id live server.  The training driver consults the registry each
 round — a coordinator swap never interrupts training (tested in
-tests/test_fault_tolerance.py)."""
+tests/test_fault_tolerance.py).  ``runtime/chaos.FaultPlan`` embeds the
+registry and extends the same fail/recover dynamics to whole-cluster
+backhaul partitions and deadline-based device dropout.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Set
+from typing import Dict, Optional, Set
 
 import numpy as np
 
@@ -48,10 +51,40 @@ class CoordinatorRegistry:
     def current(self) -> int:
         return self._current
 
+    # -- state round-trip (FaultPlan / FedSim checkpointing) ---------------
+    def state_dict(self) -> Dict:
+        return {"down": sorted(self.down), "elections": self.elections,
+                "current": self._current,
+                "rng": self.rng.bit_generator.state}
 
-def straggler_deadline(mu: np.ndarray, tau: int, quantile: float = 0.9
-                       ) -> float:
+    def load_state_dict(self, state: Dict) -> None:
+        self.down = set(int(s) for s in state["down"])
+        self.elections = int(state["elections"])
+        self._current = int(state["current"])
+        self.rng.bit_generator.state = state["rng"]
+
+
+def straggler_deadline(mu: np.ndarray, tau: int, quantile: float = 0.9,
+                       alive: Optional[np.ndarray] = None) -> float:
     """Per-round compute deadline: the controller caps rho so stragglers
     stochastically skip iterations instead of delaying the round (the
-    paper's straggler mitigation; consumed as the time allowance)."""
-    return float(np.quantile(mu * tau, quantile))
+    paper's straggler mitigation; consumed as the time allowance).
+
+    ``alive``: optional (N,) liveness mask — the quantile is taken over
+    LIVE devices only (a dead straggler must not inflate the deadline the
+    survivors are held to).  Degenerate cases are guarded: no live device
+    returns ``inf`` (nothing to wait for, nothing to cut), and a single
+    live device sets its own deadline (its time exactly — the quantile of
+    one sample), so it can never be dropped by its own deadline."""
+    t = np.asarray(mu, np.float64) * tau
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if alive.shape != t.shape:
+            raise ValueError(f"alive mask shape {alive.shape} != mu shape "
+                             f"{t.shape}")
+        t = t[alive]
+    if t.size == 0:
+        return float(np.inf)
+    if t.size == 1:
+        return float(t[0])
+    return float(np.quantile(t, quantile))

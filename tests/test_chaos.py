@@ -1,0 +1,309 @@
+"""runtime/chaos: fault injection, participation-masked round step, and
+the FedSim degraded-mode integration (DESIGN.md §Degraded-mode contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.controller import BudgetState
+from repro.core.round import init_state, make_round_step
+from repro.dist.collectives import participation_weights
+from repro.fl.baselines import make_controller
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.runtime.chaos import (ChaosConfig, FaultPlan, controls_on_live,
+                                 fold_dropped_updates)
+
+
+# ---------------------------------------------------------------------------
+# ChaosConfig / FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_chaos_config_validation():
+    with pytest.raises(ValueError, match="dropout_prob"):
+        ChaosConfig(dropout_prob=1.0)
+    with pytest.raises(ValueError, match="deadline_slack"):
+        ChaosConfig(deadline_slack=0.5)
+    with pytest.raises(ValueError, match="coordinator"):
+        ChaosConfig(coordinator_servers=0)
+
+
+def test_sample_available_deterministic_and_guarded():
+    plan = FaultPlan(ChaosConfig(seed=3, dropout_prob=0.95), 4, 2)
+    for rnd in range(30):
+        a = plan.sample_available(rnd)
+        # pure function of (seed, round): stateless replay
+        np.testing.assert_array_equal(a, plan.sample_available(rnd))
+        assert a.any()  # never an all-dead round, even at 95% dropout
+    # distinct rounds draw distinct masks (they are independent streams)
+    traces = [tuple(plan.sample_available(r)) for r in range(30)]
+    assert len(set(traces)) > 1
+
+
+def test_fault_trace_replay_identical():
+    """Two plans with the same config produce the identical fault trace —
+    the property the chaos smoke's replay check and checkpoint restores
+    rely on."""
+    cfg = ChaosConfig(seed=7, dropout_prob=0.3, partition_prob=0.4,
+                      partition_recover_prob=0.5, coordinator_fail_prob=0.4)
+    t = np.linspace(1.0, 3.0, 8)
+    traces = []
+    for _ in range(2):
+        plan = FaultPlan(cfg, 8, 4)
+        trace = []
+        for rnd in range(20):
+            f = plan.step(rnd, gossip_round=(rnd % 2 == 1),
+                          per_device_time=t)
+            trace.append((tuple(f.alive), tuple(f.cluster_conn),
+                          f.coordinator, f.n_deadline_missed))
+        traces.append(trace)
+    assert traces[0] == traces[1]
+    # and the chaos actually exercised something
+    assert any(not all(a) for a, _, _, _ in traces[0])
+
+
+def test_fault_plan_state_dict_roundtrip():
+    """A restored plan continues the EXACT trace of the original — the
+    Markov partition state, coordinator registry and rng all round-trip."""
+    cfg = ChaosConfig(seed=1, dropout_prob=0.2, partition_prob=0.5,
+                      partition_recover_prob=0.3, coordinator_fail_prob=0.5)
+    a = FaultPlan(cfg, 8, 4)
+    for rnd in range(10):
+        a.step(rnd, gossip_round=True)
+    snap = a.state_dict()
+    b = FaultPlan(cfg, 8, 4)
+    b.load_state_dict(snap)
+    for rnd in range(10, 25):
+        fa = a.step(rnd, gossip_round=(rnd % 2 == 0))
+        fb = b.step(rnd, gossip_round=(rnd % 2 == 0))
+        np.testing.assert_array_equal(fa.alive, fb.alive)
+        np.testing.assert_array_equal(fa.cluster_conn, fb.cluster_conn)
+        assert fa.coordinator == fb.coordinator
+
+
+def test_deadline_miss_drops_straggler():
+    plan = FaultPlan(ChaosConfig(deadline_quantile=0.5, deadline_slack=1.5),
+                     4, 2)
+    t = np.array([1.0, 1.0, 1.0, 1000.0])
+    f = plan.step(0, per_device_time=t, alive=np.ones(4, bool))
+    assert f.n_deadline_missed == 1
+    np.testing.assert_array_equal(f.alive, [True, True, True, False])
+    assert np.isfinite(f.deadline)
+    # without per-device times there is no deadline to miss
+    f2 = plan.step(1, alive=np.ones(4, bool))
+    assert f2.n_deadline_missed == 0 and f2.deadline == np.inf
+
+
+def test_step_never_returns_all_dead():
+    plan = FaultPlan(ChaosConfig(), 4, 2)
+    f = plan.step(0, per_device_time=np.array([5.0, 1.0, 2.0, 3.0]),
+                  alive=np.zeros(4, bool))
+    assert f.alive.sum() == 1
+    assert f.alive[1]  # the fastest device is the one kept
+
+
+def test_partitions_only_evolve_on_gossip_rounds():
+    plan = FaultPlan(ChaosConfig(partition_prob=1.0,
+                                 partition_recover_prob=0.0), 4, 2)
+    f = plan.step(0, gossip_round=False)
+    assert f.cluster_conn.all()  # link unused between gossip rounds
+    f = plan.step(1, gossip_round=True)
+    assert not f.cluster_conn.any()
+
+
+# ---------------------------------------------------------------------------
+# EF conservation under dropout
+# ---------------------------------------------------------------------------
+
+def test_fold_dropped_updates_conserves_exactly(rng):
+    """contribution + ef_out == comp + ef_new bit-for-bit for EVERY device:
+    a dropped device's update is carried in its error feedback, never
+    silently lost (the elastic-shrink invariant, applied per round)."""
+    comp = {"w": jnp.asarray(rng.normal(size=(6, 7)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(6, 3, 2)), jnp.float32)}
+    ef = jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), jnp.float32), comp)
+    alive = jnp.asarray([1, 0, 1, 1, 0, 0], bool)
+    contrib, ef_out = fold_dropped_updates(comp, ef, alive)
+    for k in comp:
+        total = np.asarray(comp[k]) + np.asarray(ef[k])
+        got = np.asarray(contrib[k]) + np.asarray(ef_out[k])
+        np.testing.assert_array_equal(got, total)  # exact, not allclose
+        # dropped rows contribute exact zeros
+        np.testing.assert_array_equal(np.asarray(contrib[k])[[1, 4, 5]], 0.0)
+        # live rows pass through untouched
+        np.testing.assert_array_equal(np.asarray(contrib[k])[[0, 2, 3]],
+                                      np.asarray(comp[k])[[0, 2, 3]])
+        np.testing.assert_array_equal(np.asarray(ef_out[k])[[0, 2, 3]],
+                                      np.asarray(ef[k])[[0, 2, 3]])
+
+
+def test_fold_dropped_updates_all_alive_identity(rng):
+    comp = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    ef = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    contrib, ef_out = fold_dropped_updates(comp, ef, jnp.ones(4, bool))
+    np.testing.assert_array_equal(np.asarray(contrib["w"]),
+                                  np.asarray(comp["w"]))
+    np.testing.assert_array_equal(np.asarray(ef_out["w"]),
+                                  np.asarray(ef["w"]))
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode controller
+# ---------------------------------------------------------------------------
+
+def _reports_budget(n=8):
+    het = HeterogeneityModel(num_devices=n, seed=0)
+    budget = BudgetState(time_budget=np.inf, energy_budget=np.inf,
+                         phi=10, q=2, backhaul_time=het.backhaul_time())
+    return het.sample_round(0), budget
+
+
+def test_controls_on_live_all_alive_exact():
+    reports, budget = _reports_budget()
+    ctrl = make_controller("hcef", tau=2)
+    rho0, theta0 = ctrl.controls(reports, budget)
+    rho1, theta1 = controls_on_live(ctrl, reports, budget, np.ones(8, bool))
+    np.testing.assert_array_equal(np.asarray(rho0), np.asarray(rho1))
+    np.testing.assert_array_equal(np.asarray(theta0), np.asarray(theta1))
+
+
+def test_controls_on_live_subset_solve():
+    reports, budget = _reports_budget()
+    ctrl = make_controller("hcef", tau=2)
+    alive = np.array([1, 0, 1, 1, 0, 1, 1, 1], bool)
+    rho, theta = controls_on_live(ctrl, reports, budget, alive)
+    assert rho.shape == (8,) and theta.shape == (8,)
+    # dead devices get the floors (they run nothing; placeholders only)
+    np.testing.assert_array_equal(rho[~alive], ctrl.rho_min)
+    np.testing.assert_array_equal(theta[~alive], ctrl.theta_min)
+    # live devices get the LIVE-subset solve, not the full-fleet one
+    import dataclasses
+    live = np.flatnonzero(alive)
+    sub = dataclasses.replace(
+        reports, sigma2=reports.sigma2[live], G2=reports.G2[live],
+        mu=reports.mu[live], alpha=reports.alpha[live], nu=reports.nu[live],
+        p=reports.p[live])
+    rho_sub, theta_sub = ctrl.controls(sub, budget)
+    np.testing.assert_array_equal(rho[alive], np.asarray(rho_sub))
+    np.testing.assert_array_equal(theta[alive], np.asarray(theta_sub))
+
+
+# ---------------------------------------------------------------------------
+# participation-masked round step
+# ---------------------------------------------------------------------------
+
+def _mk_round(gossip=True):
+    cfg = smoke_model(get_config("smollm_135m").model)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    R = topo.num_devices
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    step = jax.jit(make_round_step(cfg, hcef, topo, gossip=gossip))
+    return topo, state, batch, keys, step
+
+
+def test_round_step_all_alive_mask_bitwise():
+    """The masked round step at 100% participation is bit-for-bit the
+    unmasked round step — the degraded path costs nothing when nothing is
+    degraded (acceptance criterion of the chaos tentpole)."""
+    topo, state, batch, keys, step = _mk_round(gossip=True)
+    R, C = topo.num_devices, topo.clusters
+    rho, theta = jnp.ones(R), jnp.full(R, 0.3)
+    s_ref, _ = step(state, batch, rho, theta, keys)
+    s_msk, _ = step(state, batch, rho, theta, keys,
+                    jnp.ones(R), jnp.ones(R), jnp.ones(C))
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(s_msk.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_ref.ef), jax.tree.leaves(s_msk.ef)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_step_dead_cluster_keeps_model():
+    """A fully-dropped, fully-partitioned cluster keeps its model
+    bit-for-bit while its error feedback absorbs the pending updates;
+    the live cluster still trains."""
+    topo, state, batch, keys, step = _mk_round(gossip=True)
+    R, C, Dev = topo.num_devices, topo.clusters, topo.devices_per_cluster
+    alive = np.array([1, 1, 0, 0], np.float32)
+    aw = participation_weights(alive, clusters=C, dev=Dev)
+    s1, m = step(state, batch, jnp.ones(R), jnp.full(R, 0.3), keys,
+                 jnp.asarray(alive), jnp.asarray(aw, jnp.float32),
+                 jnp.asarray([1.0, 0.0], jnp.float32))
+    assert np.isfinite(float(m["loss"].mean()))
+    moved = False
+    ef_kept = False
+    for p0, p1, e1 in zip(jax.tree.leaves(state.params),
+                          jax.tree.leaves(s1.params),
+                          jax.tree.leaves(s1.ef)):
+        # dead cluster (rows Dev:) frozen exactly
+        np.testing.assert_array_equal(np.asarray(p0)[Dev:],
+                                      np.asarray(p1)[Dev:])
+        moved |= not np.array_equal(np.asarray(p0)[:Dev],
+                                    np.asarray(p1)[:Dev])
+        ef_kept |= float(jnp.abs(e1[Dev:]).max()) > 0.0
+    assert moved, "live cluster did not train"
+    assert ef_kept, "dropped devices' EF did not absorb their updates"
+
+
+def test_round_step_alive_without_weights_raises():
+    topo, state, batch, keys, step = _mk_round(gossip=False)
+    R = topo.num_devices
+    with pytest.raises(ValueError, match="alive_w"):
+        make_round_step(
+            smoke_model(get_config("smollm_135m").model),
+            HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0), topo,
+            gossip=False)(state, batch, jnp.ones(R), jnp.full(R, 0.3),
+                          keys, jnp.ones(R))
+
+
+# ---------------------------------------------------------------------------
+# FedSim integration
+# ---------------------------------------------------------------------------
+
+def test_fedsim_chaos_reports_and_stays_finite():
+    from benchmarks.common import make_sim
+    chaos = ChaosConfig(seed=0, dropout_prob=0.3, partition_prob=0.3,
+                        partition_recover_prob=0.5,
+                        coordinator_fail_prob=0.3)
+    sim = make_sim("hcef", dataset="cifar", n_devices=8, n_clusters=4,
+                   tau=2, q=2, time_budget=1e9, energy_budget=1e9,
+                   chaos=chaos)
+    hist = sim.run(rounds=6, eval_every=100)
+    assert len(hist) == 6
+    for rec in hist:
+        assert np.isfinite(rec["loss"])
+        assert 0.0 < rec["participation"] <= 1.0
+        assert rec["coordinator"] >= 0
+        assert rec["n_deadline_missed"] >= 0
+        assert rec["n_partitioned"] >= 0 and rec["staleness_max"] >= 0
+    # 30% dropout over 6 rounds: chaos must actually have happened
+    assert any(rec["participation"] < 1.0 for rec in hist)
+    for leaf in jax.tree.leaves(sim.params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_fedsim_zero_chaos_bitwise_identical():
+    """A chaos plan with zero fault probabilities is bit-identical to no
+    chaos at all: 100%-participation rounds take the exact fault-free
+    code path."""
+    from benchmarks.common import make_sim
+    kw = dict(dataset="cifar", n_devices=8, n_clusters=4, tau=2, q=2,
+              time_budget=1e9, energy_budget=1e9)
+    quiet = ChaosConfig(seed=0, dropout_prob=0.0, partition_prob=0.0,
+                        coordinator_fail_prob=0.0, deadline_slack=1e9)
+    sim_ref = make_sim("hcef", **kw)
+    sim_chaos = make_sim("hcef", **kw, chaos=quiet)
+    h_ref = sim_ref.run(rounds=4, eval_every=100)
+    h_chaos = sim_chaos.run(rounds=4, eval_every=100)
+    for a, b in zip(h_ref, h_chaos):
+        assert a["loss"] == b["loss"]
+    assert all(rec["participation"] == 1.0 for rec in h_chaos)
+    for a, b in zip(jax.tree.leaves(sim_ref.params),
+                    jax.tree.leaves(sim_chaos.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import mixing
-from repro.dist.collectives import (Wire, mix_local,
+from repro.dist.collectives import (Wire, mix_local, participation_weights,
                                     sparse_neighbor_exchange, wire_decode,
                                     wire_encode, wire_k, wire_ships_dense)
 from repro.dist.compat import make_mesh, shard_map
@@ -396,3 +396,201 @@ def test_per_cluster_low_level_contracts_towards_dense(rng):
         mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
         check_vma=False))(x))
     assert np.abs(got - want).sum() < np.abs(low - want).sum()
+
+
+# ---------------------------------------------------------------------------
+# participation masks (DESIGN.md §Degraded-mode contract)
+# ---------------------------------------------------------------------------
+
+def _run_masked(x, C, Dev, hkind, alive=None, conn=None, sparse=False,
+                cluster_theta=None):
+    """jit+shard_map a dense or sparse mix with TRACED alive/conn args."""
+    specs, args = [P("data", None)], [x]
+    if alive is not None:
+        args.append(jnp.asarray(alive, jnp.float32))
+        specs.append(P("data"))
+    if conn is not None:
+        args.append(jnp.asarray(conn, jnp.float32))
+        specs.append(P(None))
+
+    def f(*a):
+        xl, i = a[0], 1
+        al = cn = None
+        if alive is not None:
+            al, i = a[i], i + 1
+        if conn is not None:
+            cn = a[i]
+        if sparse:
+            return sparse_neighbor_exchange(
+                xl, clusters=C, dev=Dev, axes=("data",), hkind=hkind,
+                cluster_theta=cluster_theta, alive=al, conn=cn)
+        return mix_local(xl, clusters=C, dev=Dev, axes=("data",),
+                         hkind=hkind, alive=al, conn=cn)
+
+    g = jax.jit(shard_map(f, mesh=_mesh(), in_specs=tuple(specs),
+                          out_specs=P("data", None), check_vma=False))
+    return np.asarray(g(*args))
+
+
+def _masked_ref(x, C, Dev, hkind, alive, conn):
+    """f64 reference: live-count-renormalized intra means, then
+    participation_mixing(H, conn), then broadcast back."""
+    xb = np.asarray(x, np.float64).reshape(C, Dev, -1)
+    a = np.asarray(alive, np.float64).reshape(C, Dev)
+    cnt = a.sum(1)
+    means = np.where(cnt[:, None] > 0,
+                     (xb * a[..., None]).sum(1)
+                     / np.maximum(cnt, 1.0)[:, None],
+                     xb.sum(1) / Dev)  # fully-dead cluster: plain mean
+    if hkind != "none":
+        H = mixing.make_mixing(hkind, C)
+        means = np.asarray(mixing.participation_mixing(
+            H, np.asarray(conn, np.float32)), np.float64) @ means
+    return np.repeat(means, Dev, axis=0)
+
+
+def test_participation_weights_properties(rng):
+    C, Dev = 4, 2
+    # all-alive returns EXACT ones (the bitwise fault-free contract)
+    np.testing.assert_array_equal(
+        participation_weights(np.ones(C * Dev), clusters=C, dev=Dev),
+        np.ones(C * Dev, np.float32))
+    alive = np.array([1, 1, 1, 0, 0, 0, 1, 0], np.float64)
+    w = participation_weights(alive, clusters=C, dev=Dev)
+    # dead devices weigh zero; a fully-dead cluster gets neutral 1.0
+    # weights (its premultiplied rows pass through so the mix keeps the
+    # old model); live clusters' weights sum to Dev (renormalized mean)
+    np.testing.assert_array_equal(w, [1.0, 1.0, 2.0, 0.0, 1.0, 1.0,
+                                      2.0, 0.0])
+
+
+@pytest.mark.parametrize("hkind", ["ring", "complete", "erdos_renyi",
+                                   "none"])
+@pytest.mark.parametrize("C,Dev", [(4, 2), (2, 4), (8, 1)])
+def test_mix_local_all_alive_bitwise(C, Dev, hkind, rng):
+    """TRACED all-ones alive/conn masks are bit-for-bit the unmasked mix:
+    the mask is applied as a barriered parameter premultiply (never a
+    traced divisor), so a zero-fault round costs nothing."""
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 33)), jnp.float32)
+    want = _run_masked(x, C, Dev, hkind)
+    got = _run_masked(x, C, Dev, hkind, alive=np.ones(R),
+                      conn=None if hkind == "none" else np.ones(C))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mix_local_all_alive_erdos_16x1_ulp():
+    """The ONE documented exception to the bitwise all-alive contract:
+    dense erdos_renyi at C=16, Dev=1 with a traced all-ones mask drifts
+    <= 1 ulp in the feature tail (SIMD tail codegen, see
+    _alive_premultiply).  Callers avoid even that by dispatching
+    fault-free rounds with alive=None; here we pin the drift bound so a
+    regression past tail-rounding scale fails."""
+    rng = np.random.default_rng(0)
+    C, Dev = 16, 1
+    x = jnp.asarray(rng.normal(size=(C, 33)), jnp.float32)
+    want = _run_masked(x, C, Dev, "erdos_renyi")
+    got = _run_masked(x, C, Dev, "erdos_renyi", alive=np.ones(C),
+                      conn=np.ones(C))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-7)
+    assert np.mean(got != want) < 0.01  # a couple of tail elements at most
+
+
+@pytest.mark.parametrize("cluster_theta", [None, (0.1, 0.3, 0.2, 0.3)])
+def test_sparse_exchange_all_alive_bitwise(cluster_theta, rng):
+    """The sparse wire path honours the same all-alive bitwise contract,
+    uniform and per-cluster wire levels alike."""
+    C, Dev = 4, 2
+    ct = cluster_theta or (0.25,) * C
+    x = jnp.asarray(rng.normal(size=(C * Dev, 64)), jnp.float32)
+    want = _run_masked(x, C, Dev, "ring", sparse=True, cluster_theta=ct)
+    got = _run_masked(x, C, Dev, "ring", sparse=True, cluster_theta=ct,
+                      alive=np.ones(C * Dev), conn=np.ones(C))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sparse_exchange_dense_plan_traced_conn_ulp(rng):
+    """The second documented exception (see _conn_or_none): a cluster_theta
+    mix with a dense-fallback level under a TRACED all-ones conn drifts
+    <= 1 ulp (the conn op repartitions the decode/coefficient fusion).
+    Concrete all-ones conn short-circuits and stays bitwise."""
+    C, Dev = 4, 2
+    ct = (0.1, 0.3, 0.2, 1.0)
+    x = jnp.asarray(rng.normal(size=(C * Dev, 64)), jnp.float32)
+    want = _run_masked(x, C, Dev, "ring", sparse=True, cluster_theta=ct)
+    got = _run_masked(x, C, Dev, "ring", sparse=True, cluster_theta=ct,
+                      alive=np.ones(C * Dev), conn=np.ones(C))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-7)
+    # off-mesh, conn concrete: the short-circuit restores bitwise identity
+    want0 = np.asarray(sparse_neighbor_exchange(
+        x, clusters=C, dev=Dev, axes=(), hkind="ring", cluster_theta=ct))
+    got0 = np.asarray(sparse_neighbor_exchange(
+        x, clusters=C, dev=Dev, axes=(), hkind="ring", cluster_theta=ct,
+        alive=np.ones(C * Dev, np.float32), conn=np.ones(C, np.float32)))
+    np.testing.assert_array_equal(got0, want0)
+
+
+@pytest.mark.parametrize("hkind", ["ring", "complete", "none"])
+@pytest.mark.parametrize("C,Dev", [(4, 2), (2, 4), (8, 1)])
+def test_mix_local_partial_mask_matches_reference(C, Dev, hkind, rng):
+    """Partial participation on the mesh equals the f64 reference:
+    live-count-renormalized intra means mixed through
+    participation_mixing(H, conn)."""
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 33)), jnp.float32)
+    alive = (rng.random(R) > 0.4).astype(np.float64)
+    alive[0] = 1.0
+    conn = (rng.random(C) > 0.4).astype(np.float64)
+    aw = participation_weights(alive, clusters=C, dev=Dev)
+    got = _run_masked(x, C, Dev, hkind, alive=aw,
+                      conn=None if hkind == "none" else conn)
+    np.testing.assert_allclose(
+        got, _masked_ref(x, C, Dev, hkind, alive, conn), atol=1e-5)
+
+
+def test_mix_local_off_mesh_concrete_all_ones_bitwise(rng):
+    """Off-mesh with CONCRETE all-ones masks the premultiply
+    short-circuits to the identity — bitwise on every shape, including
+    the (16,1) erdos_renyi corner the traced path exempts."""
+    for C, Dev in [(4, 2), (16, 1)]:
+        R = C * Dev
+        x = jnp.asarray(rng.normal(size=(R, 33)), jnp.float32)
+        for hkind in ["ring", "erdos_renyi", "none"]:
+            want = np.asarray(mix_local(x, clusters=C, dev=Dev, axes=(),
+                                        hkind=hkind))
+            got = np.asarray(mix_local(
+                x, clusters=C, dev=Dev, axes=(), hkind=hkind,
+                alive=np.ones(R, np.float32),
+                conn=None if hkind == "none" else np.ones(C, np.float32)))
+            np.testing.assert_array_equal(got, want, err_msg=(C, Dev, hkind))
+
+
+def test_mix_local_off_mesh_partial_mask_matches_reference(rng):
+    C, Dev = 4, 2
+    R = C * Dev
+    x = jnp.asarray(rng.normal(size=(R, 33)), jnp.float32)
+    alive = np.array([1, 1, 1, 0, 0, 0, 1, 1], np.float64)
+    conn = np.array([1, 0, 1, 1], np.float64)
+    aw = participation_weights(alive, clusters=C, dev=Dev)
+    got = np.asarray(mix_local(
+        x, clusters=C, dev=Dev, axes=(), hkind="ring",
+        alive=jnp.asarray(aw, jnp.float32),
+        conn=jnp.asarray(conn, jnp.float32)))
+    np.testing.assert_allclose(
+        got, _masked_ref(x, C, Dev, "ring", alive, conn), atol=1e-5)
+
+
+def test_participation_mixing_operator():
+    """participation_mixing: all-connected is bitwise H; a partitioned
+    cluster neither sends (column zeroed, mass into self weights) nor
+    receives (its row is e_c — it keeps its own model)."""
+    H = mixing.make_mixing("ring", 4)
+    Hj = jnp.asarray(H, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(mixing.participation_mixing(Hj, jnp.ones(4))),
+        np.asarray(Hj))
+    conn = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    Hm = np.asarray(mixing.participation_mixing(Hj, conn))
+    np.testing.assert_array_equal(Hm[1], np.eye(4, dtype=np.float32)[1])
+    assert (Hm[[0, 2, 3], 1] == 0).all()  # nobody receives from cluster 1
+    np.testing.assert_allclose(Hm.sum(1), 1.0, atol=1e-6)  # rows stochastic

@@ -10,8 +10,8 @@ import pytest
 from repro.configs import get_config, smoke_model
 from repro.configs.base import FLTopology, HCEFConfig
 from repro.core.round import init_state, make_round_step
-from repro.runtime.checkpoint import (latest_checkpoint, load_pytree,
-                                      save_pytree)
+from repro.runtime.checkpoint import (CheckpointError, latest_checkpoint,
+                                      load_pytree, save_pytree)
 from repro.runtime.elastic import resize_state
 from repro.runtime.failover import CoordinatorRegistry, straggler_deadline
 
@@ -74,6 +74,33 @@ def test_straggler_deadline_quantile():
     assert d < 50.0  # the straggler does not set the deadline
 
 
+def test_straggler_deadline_live_mask():
+    """The quantile is taken over LIVE devices only: a dead straggler must
+    not inflate the deadline the survivors are held to."""
+    mu = np.array([1.0, 1.0, 1.0, 100.0])
+    alive = np.array([True, True, True, False])
+    assert straggler_deadline(mu, tau=2, quantile=0.9, alive=alive) == \
+        pytest.approx(2.0)
+    # degenerate guards: no live device -> inf; one live device sets its
+    # own deadline (it can never be dropped by it)
+    assert straggler_deadline(mu, tau=2, alive=np.zeros(4, bool)) == np.inf
+    only = np.array([False, False, False, True])
+    assert straggler_deadline(mu, tau=2, alive=only) == pytest.approx(200.0)
+    with pytest.raises(ValueError, match="shape"):
+        straggler_deadline(mu, tau=2, alive=np.ones(3, bool))
+
+
+def test_coordinator_total_outage_keeps_quorum():
+    """fail_prob=1, recover_prob=0: every server dies every round, the
+    quorum guard resurrects one — elections churn but a valid coordinator
+    exists EVERY round (training never stalls on the registry)."""
+    reg = CoordinatorRegistry(num_servers=3, fail_prob=1.0,
+                              recover_prob=0.0, seed=0)
+    coords = [reg.step() for _ in range(20)]
+    assert all(0 <= c < 3 for c in coords)
+    assert reg.elections >= 5  # forced churn actually re-elected
+
+
 @pytest.mark.parametrize("new_c,new_d", [(4, 2), (2, 4), (1, 2), (2, 1)])
 def test_elastic_resize_roundtrip(new_c, new_d):
     cfg, topo, hcef, state, batch, keys, step = _mk(clusters=2, dev=2)
@@ -104,6 +131,91 @@ def test_elastic_resize_roundtrip(new_c, new_d):
     assert np.isfinite(float(m["loss"].mean()))
 
 
+def test_atomic_save_survives_kill_mid_write(tmp_path, monkeypatch):
+    """A writer killed mid-save leaves the previous checkpoint intact and
+    no torn file: the write goes to a hidden temp and only an atomic
+    rename publishes it."""
+    p = tmp_path / "ckpt_000001.npz"
+    save_pytree(p, {"x": jnp.arange(3.0)}, meta={"round": 1})
+    def boom(*a, **k):
+        raise RuntimeError("killed mid-write")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(RuntimeError, match="mid-write"):
+        save_pytree(p, {"x": jnp.zeros(3)}, meta={"round": 2})
+    monkeypatch.undo()
+    # the old checkpoint is untouched and fully readable
+    restored, meta = load_pytree(p, {"x": jnp.zeros(3)})
+    assert meta["round"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["x"]), [0.0, 1.0, 2.0])
+    # no temp litter, and discovery never resumes a temp file
+    assert not [f for f in tmp_path.iterdir() if ".tmp" in f.name]
+    assert latest_checkpoint(tmp_path) == p
+
+
+def test_corrupt_checkpoint_raises_checkpoint_error(tmp_path):
+    """Torn/corrupt checkpoints raise CheckpointError (one exception type
+    restart logic can catch to fall back to the previous checkpoint)."""
+    p = tmp_path / "ckpt_000001.npz"
+    save_pytree(p, {"x": jnp.arange(4.0)}, meta={"round": 1})
+    good = p.read_bytes()
+    # truncated mid-archive (the torn write _atomic_write exists to prevent)
+    p.write_bytes(good[: len(good) // 2])
+    with pytest.raises(CheckpointError):
+        load_pytree(p, {"x": jnp.zeros(4)})
+    # outright garbage
+    p.write_bytes(b"not a zip archive at all")
+    with pytest.raises(CheckpointError):
+        load_pytree(p, {"x": jnp.zeros(4)})
+    # structurally valid archive missing a template key
+    p.write_bytes(good)
+    with pytest.raises(CheckpointError, match="missing array"):
+        load_pytree(p, {"x": jnp.zeros(4), "y": jnp.zeros(2)})
+    # shape mismatch vs the template
+    with pytest.raises(CheckpointError, match="shape"):
+        load_pytree(p, {"x": jnp.zeros(7)})
+
+
+def test_save_pytree_rejects_meta_key_collision(tmp_path):
+    from repro.runtime.checkpoint import META_KEY
+    with pytest.raises(ValueError, match=META_KEY):
+        save_pytree(tmp_path / "c.npz", {META_KEY: jnp.zeros(1)})
+
+
+def _aggregate_f64(params, ef):
+    """The elastic conservation invariant: the model every cluster would
+    reach if all pending EF were uploaded, averaged over clusters.  With
+    uniform cluster sizes that is mean-over-rows of params + ef."""
+    return [np.asarray(p, np.float64).mean(0) + np.asarray(e,
+                                                           np.float64).mean(0)
+            for p, e in zip(jax.tree.leaves(params), jax.tree.leaves(ef))]
+
+
+def test_elastic_grow_then_shrink_conserves_ef():
+    """Growing keeps surviving devices' pending EF (scaled R'/R) and
+    shrinking folds it into the models — the global aggregate is preserved
+    through a (2,2) -> (4,2) -> (2,2) round-trip, and no EF is dropped."""
+    cfg, topo, hcef, state, batch, keys, step = _mk(clusters=2, dev=2)
+    R = topo.num_devices
+    state, _ = step(state, batch, jnp.ones(R), jnp.full(R, 0.2), keys)
+    assert any(float(jnp.abs(e).max()) > 0 for e in jax.tree.leaves(state.ef))
+    agg0 = _aggregate_f64(state.params, state.ef)
+
+    big = FLTopology(clusters=4, devices_per_cluster=2)
+    p1, e1, m1 = resize_state(state.params, state.ef, state.momentum,
+                              topo, big)
+    # surviving devices kept (scaled) EF — not zeroed on grow
+    assert any(float(jnp.abs(e).max()) > 0 for e in jax.tree.leaves(e1))
+    for a, b in zip(agg0, _aggregate_f64(p1, e1)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+    p2, e2, m2 = resize_state(p1, e1, m1, big, topo)
+    # shrink folds EF into the models exactly once: EF starts clean
+    for e in jax.tree.leaves(e2):
+        np.testing.assert_array_equal(np.asarray(e), 0.0)
+    for a, b in zip(agg0, _aggregate_f64(p2, e2)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
 def test_fedsim_checkpoint_roundtrip(tmp_path):
     from benchmarks.common import make_sim
     sim = make_sim("hcef", dataset="cifar", n_devices=8, n_clusters=4,
@@ -116,4 +228,36 @@ def test_fedsim_checkpoint_roundtrip(tmp_path):
     assert sim2.round == sim.round
     assert sim2.budget.time_spent_this == sim.budget.time_spent_this
     for a, b in zip(jax.tree.leaves(sim.params), jax.tree.leaves(sim2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedsim_chaos_restore_is_bit_identical(tmp_path):
+    """save -> restore -> run under ACTIVE fault injection matches never
+    having stopped, bit for bit: the checkpoint carries the np RNG, the
+    fault plan's Markov state (partitions + coordinator registry) and the
+    staleness counters, and the dropout trace is round-keyed."""
+    from benchmarks.common import make_sim
+    from repro.runtime.chaos import ChaosConfig
+    chaos = ChaosConfig(seed=0, dropout_prob=0.3, partition_prob=0.4,
+                        partition_recover_prob=0.5,
+                        coordinator_fail_prob=0.4)
+    kw = dict(dataset="cifar", n_devices=8, n_clusters=4, tau=2, q=2,
+              time_budget=1e9, energy_budget=1e9, chaos=chaos)
+    sim = make_sim("hcef", **kw)
+    sim.run(rounds=3, eval_every=100)
+    sim.save(tmp_path / "ck.npz")
+    sim2 = make_sim("hcef", **kw)
+    sim2.restore(tmp_path / "ck.npz")
+    h1 = sim.run(rounds=3, eval_every=100)[-3:]
+    h2 = sim2.run(rounds=3, eval_every=100)[-3:]
+    for a, b in zip(h1, h2):
+        assert a["loss"] == b["loss"]
+        assert a["participation"] == b["participation"]
+        assert a["coordinator"] == b["coordinator"]
+        assert a["n_partitioned"] == b["n_partitioned"]
+        assert a["staleness_max"] == b["staleness_max"]
+    for a, b in zip(jax.tree.leaves(sim.params),
+                    jax.tree.leaves(sim2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(sim.ef), jax.tree.leaves(sim2.ef)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
