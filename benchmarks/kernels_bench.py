@@ -169,6 +169,52 @@ def round_step_bench(iters=5):
                     state_sh, iters=iters)
         rows.append((f"round_sparse_pc_gossip_th{levels[0]}-{levels[-1]}",
                      us, f"R{R}_smoke_8dev"))
+        # overlapped engine (DESIGN.md §Overlap): the staleness=1
+        # all-stale program against the synchronous per-cluster program
+        # it replaces.  On the fake-device CPU mesh collectives cost ~0
+        # and the pending-buffer copies are a visible fraction of the
+        # tiny smoke model, so this row tracks the engine's OVERHEAD; the
+        # wall-clock win needs real inter-chip links and shows up in
+        # dryrun's gossip_overlap free-byte fraction and the modeled row
+        # below.
+        from repro.core.round import OverlapState, make_overlap_round_step
+        hcef_ov = dataclasses.replace(hcef_sp, overlap=True, staleness=1)
+        lv = (levels[0], levels[-1])
+        step_ov = jax.jit(make_overlap_round_step(
+            cfg, hcef_ov, topo, policy=policy, gossip=True,
+            cluster_levels=lv))
+        ov_state = OverlapState(fl=state_sh, pending=state_sh.params)
+        theta = jnp.full(R, levels[0])
+        us_ov = _bench(lambda s: step_ov(s, batch, rho, theta, keys),
+                       ov_state, iters=iters)
+        rows.append(("round_overlap_stale1_gossip", us_ov,
+                     f"sync={us:.0f}us_R{R}_smoke_8dev"))
+
+    # modeled overlapped round time on the smollm heterogeneity cell:
+    # a stale cluster costs max(compute, gossip) instead of the sum.
+    from repro.fl.cost_model import (decide_stale_clusters,
+                                     overlap_round_time, round_time)
+    from repro.fl.heterogeneity import HeterogeneityModel
+
+    # tpu_pod + smollm-scale weights: the backhaul transfer is comparable
+    # to tau local steps, the regime the overlapped engine targets
+    het = HeterogeneityModel(num_devices=R, profile="tpu_pod",
+                             base_step_time=10.0, model_bits=135e6 * 16)
+    rep = het.sample_round(0)
+    cluster_of = np.repeat(np.arange(topo.clusters),
+                           topo.devices_per_cluster)
+    rho_m, th_m = np.ones(R), np.full(R, 0.4)
+    bh = het.backhaul_time()
+    t_sync, _ = round_time(rho_m, th_m, rep.mu, rep.nu, hcef.tau,
+                           cluster_of, gossip=True, backhaul=bh)
+    stale = decide_stale_clusters(rho_m, th_m, rep.mu, rep.nu, hcef.tau,
+                                  cluster_of, backhaul=bh)
+    t_ov, _ = overlap_round_time(rho_m, th_m, rep.mu, rep.nu, hcef.tau,
+                                 cluster_of, gossip=True, backhaul=bh,
+                                 stale_clusters=stale or
+                                 tuple(range(topo.clusters)))
+    rows.append(("round_overlap_model_smollm", t_ov * 1e6,
+                 f"sync={t_sync:.1f}s_hidden={1 - t_ov / t_sync:.2f}"))
     return rows
 
 

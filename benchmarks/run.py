@@ -36,6 +36,10 @@ def main() -> None:
     rows = kernels_bench.main()
     _write_bench_json(rows)
 
+    print("\n== overlap: convergence vs staleness ==")
+    from benchmarks import overlap_sweep
+    overlap_sweep.main(rounds=10)
+
     if smoke:
         print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
         return

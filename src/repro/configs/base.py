@@ -161,6 +161,14 @@ class HCEFConfig:
     wire_dtype: str = "f32"  # f32 | bf16 | int8 (dist/collectives.Wire)
     wire_block: int = 1024  # wire-encode slab length (block-local offsets)
     error_feedback: bool = True
+    # --- overlapped round engine (DESIGN.md §Overlap contract) ---
+    # overlap=True double-buffers the edge models so gossip ppermutes on the
+    # PENDING buffer run concurrently with the next round's local steps.
+    # staleness=0 waits at the fold boundary (bit-for-bit the synchronous
+    # engine); staleness=1 lets stale clusters mix neighbors' stale-by-1
+    # means (bounded-stale semi-async).
+    overlap: bool = False
+    staleness: int = 0
 
     def __post_init__(self):
         if self.wire_dtype not in ("f32", "bf16", "int8"):
@@ -170,6 +178,12 @@ class HCEFConfig:
                 f"int8 wire needs wire_block <= 32768, got {self.wire_block}")
         if self.sparse_gossip:
             validate_theta_levels(self.theta_levels)
+        if self.staleness not in (0, 1):
+            raise ValueError(
+                f"staleness must be 0 (synchronous fold) or 1 (bounded "
+                f"stale), got {self.staleness}")
+        if self.staleness and not self.overlap:
+            raise ValueError("staleness > 0 requires overlap=True")
 
 
 @dataclass(frozen=True)

@@ -34,6 +34,24 @@ class FLState(NamedTuple):
     round_idx: jnp.ndarray  # scalar int32
 
 
+class OverlapState(NamedTuple):
+    """Double-buffered state for the overlapped round engine (DESIGN.md
+    §Overlap contract).
+
+    ``fl`` is the working buffer (buffer B: the tau local SGD steps run
+    against it); ``pending`` is the gossip payload buffer (buffer A: the
+    model snapshot the in-flight gossip ppermutes read).  At every round
+    boundary ``pending`` is refreshed to the new params, so on entry to a
+    gossip round it holds the START-of-round model — stale by exactly one
+    edge round relative to the fold.  ``params`` and ``pending`` diverge
+    only INSIDE a staleness=1 gossip step, between the local-step stage
+    and the fold; with staleness=0 the fold waits for fresh means and the
+    two buffers never carry different models (bit-for-bit the synchronous
+    engine)."""
+    fl: FLState
+    pending: Any    # params-shaped pytree, leaves (R, *shape)
+
+
 def _global_norm2(tree):
     return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                for x in jax.tree.leaves(tree))
@@ -63,6 +81,21 @@ def abstract_state(cfg: ModelConfig, hcef: HCEFConfig,
                                              jax.random.PRNGKey(0)))
 
 
+def init_overlap_state(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
+                       rng) -> OverlapState:
+    """Both buffers start at the same model: the first gossip round's
+    payload is the (identical) initial model, so round 0 is a fixed point
+    of the stale mix exactly like it is of the synchronous one."""
+    fl = init_state(cfg, hcef, topo, rng)
+    return OverlapState(fl=fl, pending=fl.params)
+
+
+def abstract_overlap_state(cfg: ModelConfig, hcef: HCEFConfig,
+                           topo: FLTopology) -> OverlapState:
+    return jax.eval_shape(lambda: init_overlap_state(
+        cfg, hcef, topo, jax.random.PRNGKey(0)))
+
+
 def _split_batch(batch: Dict[str, jnp.ndarray], R: int, tau: int):
     """(global_batch, ...) -> (R, tau, b_local, ...)."""
     def split(x):
@@ -70,6 +103,29 @@ def _split_batch(batch: Dict[str, jnp.ndarray], R: int, tau: int):
         assert B % (R * tau) == 0, (B, R, tau)
         return x.reshape(R, tau, B // (R * tau), *x.shape[1:])
     return {k: split(v) for k, v in batch.items()}
+
+
+def _check_cluster_levels(cluster_levels, hcef, C, policy, gossip):
+    """Shared static-k validation for the sync and overlapped factories."""
+    if cluster_levels is None:
+        return None
+    if not (hcef.sparse_gossip and gossip):
+        raise ValueError("cluster_levels requires sparse_gossip and a "
+                         "gossip round step")
+    if policy is None or policy.mesh is None:
+        raise ValueError("cluster_levels requires a mesh policy (the "
+                         "non-fused path has no wire)")
+    cluster_levels = tuple(float(t) for t in cluster_levels)
+    if len(cluster_levels) != C:
+        raise ValueError(f"cluster_levels has {len(cluster_levels)} "
+                         f"entries for {C} clusters")
+    grid = {float(t) for t in hcef.theta_levels}
+    bad = [t for t in cluster_levels if t not in grid]
+    if bad:
+        raise ValueError(f"cluster_levels {bad} not in theta_levels "
+                         f"{sorted(grid)} (the static-k contract only "
+                         f"lowers grid levels)")
+    return cluster_levels
 
 
 def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
@@ -95,23 +151,8 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
     model = get_model(cfg)
     C, Dev = topo.clusters, topo.devices_per_cluster
     R = topo.num_devices
-    if cluster_levels is not None:
-        if not (hcef.sparse_gossip and gossip):
-            raise ValueError("cluster_levels requires sparse_gossip and a "
-                             "gossip round step")
-        if policy is None or policy.mesh is None:
-            raise ValueError("cluster_levels requires a mesh policy (the "
-                             "non-fused path has no wire)")
-        cluster_levels = tuple(float(t) for t in cluster_levels)
-        if len(cluster_levels) != C:
-            raise ValueError(f"cluster_levels has {len(cluster_levels)} "
-                             f"entries for {C} clusters")
-        grid = {float(t) for t in hcef.theta_levels}
-        bad = [t for t in cluster_levels if t not in grid]
-        if bad:
-            raise ValueError(f"cluster_levels {bad} not in theta_levels "
-                             f"{sorted(grid)} (the static-k contract only "
-                             f"lowers grid levels)")
+    cluster_levels = _check_cluster_levels(cluster_levels, hcef, C, policy,
+                                           gossip)
     H_np = mixing.make_mixing(topo.backhaul, C)
     # Paper Appendix A: the whole aggregation (intra-cluster averaging +
     # gossip + broadcast-back) is one linear operator on the device dim,
@@ -399,6 +440,164 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                             round_idx=state.round_idx + 1)
         out_metrics = {k: v for k, v in metrics.items()}
         return new_state, out_metrics
+
+    return round_step
+
+
+def make_overlap_round_step(cfg: ModelConfig, hcef: HCEFConfig,
+                            topo: FLTopology, policy=None, *,
+                            gossip: bool = True, impl=None,
+                            cluster_levels=None, stale_clusters=None):
+    """Overlapped round step (DESIGN.md §Overlap contract):
+    round_step(state: OverlapState, ...) -> (OverlapState, metrics).
+
+    Staleness semantics (``hcef.staleness``):
+
+      0: the fold waits for this round's gossip — the step DELEGATES to
+         the synchronous ``make_round_step`` program (bit-for-bit
+         identical by construction; the fl buffer sees the exact same jit
+         graph) and only additionally refreshes the pending buffer.
+      1: gossip rounds run as two stages.  Stage 1 is the synchronous
+         intra-only step (tau local steps + compress + EF fold + intra
+         mean).  Stage 2 folds the gossip mix where every cluster in the
+         STATIC ``stale_clusters`` set (default: all clusters) ships its
+         PENDING (start-of-round) model over the wire while the self term
+         stays fresh (``sparse_neighbor_exchange(stale=...)``).  The stale
+         payload is a step INPUT, so its encode + band-rotation ppermutes
+         carry no data dependence on the local-step scan — XLA can issue
+         them while the tau steps run, which is exactly what the dryrun
+         overlap verdict (``hlo_analysis.check_gossip_overlap``) checks.
+         Non-gossip rounds delegate to the synchronous gossip=False step.
+
+    ``stale_clusters``: static cluster ids that run stale, from
+    ``fl.cost_model.decide_stale_clusters`` (clusters whose backhaul
+    gossip time exceeds the straggler-deadline compute window).  An empty
+    tuple means nobody is behind — the step degrades to the synchronous
+    gossip program.  Partial sets keep fresh senders' payloads dependent
+    on this round's compute (documented reduced overlap).
+
+    Chaos masks work in both modes exactly like the sync engine:
+    ``alive``/``alive_w`` mask the intra stage (EF-conserving fold),
+    ``conn`` applies participation mixing to the gossip fold.
+    """
+    if not hcef.overlap:
+        raise ValueError("make_overlap_round_step requires hcef.overlap "
+                         "(use make_round_step for the synchronous engine)")
+    C, Dev = topo.clusters, topo.devices_per_cluster
+    R = topo.num_devices
+    if stale_clusters is not None:
+        stale_clusters = tuple(sorted({int(c) for c in stale_clusters}))
+        if any(not 0 <= c < C for c in stale_clusters):
+            raise ValueError(
+                f"stale_clusters {stale_clusters} out of range({C})")
+    sync_like = (hcef.staleness == 0 or not gossip
+                 or stale_clusters == () or R == 1)
+    if sync_like:
+        inner = make_round_step(
+            cfg, hcef, topo, policy, gossip=gossip, impl=impl,
+            cluster_levels=cluster_levels if gossip else None)
+
+        def round_step(state: OverlapState, batch, rho, theta, keys,
+                       alive=None, alive_w=None, conn=None):
+            fl, metrics = inner(state.fl, batch, rho, theta, keys,
+                                alive=alive, alive_w=alive_w, conn=conn)
+            return OverlapState(fl=fl, pending=fl.params), metrics
+
+        return round_step
+
+    # staleness == 1 gossip round: two-stage bounded-stale program.
+    from repro.dist.collectives import sparse_neighbor_exchange
+
+    cluster_levels = _check_cluster_levels(cluster_levels, hcef, C, policy,
+                                           gossip=True)
+    if stale_clusters is None:
+        stale_clusters = tuple(range(C))
+    inner = make_round_step(cfg, hcef, topo, policy, gossip=False, impl=impl)
+    hkind = topo.backhaul
+    mesh = policy.mesh if policy is not None else None
+    # the wire format only exists on the sparse mesh path; the dense fold
+    # ships the full rows (theta=1.0 f32 wire == the dense-wire fallback).
+    sparse = hcef.sparse_gossip and mesh is not None
+    wire_kw = (dict(wire_dtype=hcef.wire_dtype, wire_block=hcef.wire_block)
+               if sparse else dict(wire_dtype="f32"))
+    rep_axes = tuple(policy.replica_axes) if (
+        policy is not None and policy.replica_axes) else ()
+
+    def round_step(state: OverlapState, batch, rho, theta, keys,
+                   alive=None, alive_w=None, conn=None):
+        fl_mid, metrics = inner(state.fl, batch, rho, theta, keys,
+                                alive=alive, alive_w=alive_w, conn=conn)
+        conn_f = (jnp.asarray(conn, jnp.float32) if conn is not None
+                  else None)
+
+        if mesh is not None:
+            from jax.sharding import PartitionSpec as PS
+            from repro.dist.compat import shard_map
+
+            shd = policy.param_shardings(state.fl.params, stacked=True)
+            specs = jax.tree.map(lambda s: s.spec, shd)
+            flat_m, treedef = jax.tree.flatten(fl_mid.params)
+            flat_p = treedef.flatten_up_to(state.pending)
+            flat_s = treedef.flatten_up_to(specs)
+            gossip_conn = conn is not None
+
+            def gossip_leaf(ml, pl, spec, level):
+                def local_g(ms, ps, *cargs):
+                    kw = dict(clusters=C, dev=Dev, axes=rep_axes,
+                              hkind=hkind, intra_done=True, stale=ps,
+                              stale_clusters=stale_clusters,
+                              conn=cargs[0] if gossip_conn else None,
+                              **wire_kw)
+                    if cluster_levels is not None:
+                        return sparse_neighbor_exchange(
+                            ms, cluster_theta=cluster_levels, **kw)
+                    return sparse_neighbor_exchange(ms, theta=level, **kw)
+
+                gspecs = (spec, spec) + ((PS(None),) if gossip_conn
+                                         else ())
+                gargs = (ml, pl) + ((conn_f,) if gossip_conn else ())
+                return shard_map(local_g, mesh=mesh, in_specs=gspecs,
+                                 out_specs=spec, check_vma=False)(*gargs)
+
+            if cluster_levels is not None or not sparse:
+                new_flat = [gossip_leaf(m, p, s, 1.0)
+                            for m, p, s in zip(flat_m, flat_p, flat_s)]
+                if sparse:
+                    metrics["theta_wire"] = jnp.float32(max(cluster_levels))
+            else:
+                # traced-theta fallback: one lax.switch branch per level,
+                # dispatched on the global max (same contract as the sync
+                # engine's sparse path).
+                levels = tuple(sorted({float(t)
+                                       for t in hcef.theta_levels}))
+                lv = jnp.asarray(levels, jnp.float32)
+                idx = jnp.minimum(
+                    jnp.searchsorted(lv, jnp.max(theta), side="left"),
+                    len(levels) - 1).astype(jnp.int32)
+
+                def branch(level):
+                    return lambda op: [gossip_leaf(m, p, s, level)
+                                       for m, p, s in zip(op[0], op[1],
+                                                          flat_s)]
+
+                new_flat = jax.lax.switch(idx, [branch(l) for l in levels],
+                                          (flat_m, flat_p))
+                metrics["theta_wire"] = jnp.take(lv, idx)
+            new_params = treedef.unflatten(new_flat)
+        else:
+            # off-mesh: dense fold through the same stale-select operator
+            # (theta=1.0 f32 wire ships the dense rows bit-exactly).
+            new_params = jax.tree.map(
+                lambda ml, pl: sparse_neighbor_exchange(
+                    ml, clusters=C, dev=Dev, axes=(), hkind=hkind,
+                    theta=1.0, intra_done=True, stale=pl,
+                    stale_clusters=stale_clusters, conn=conn_f,
+                    wire_dtype="f32"),
+                fl_mid.params, state.pending)
+        metrics["stale_frac"] = jnp.float32(len(stale_clusters) / C)
+        fl = FLState(params=new_params, momentum=fl_mid.momentum,
+                     ef=fl_mid.ef, round_idx=fl_mid.round_idx)
+        return OverlapState(fl=fl, pending=new_params), metrics
 
     return round_step
 

@@ -541,13 +541,15 @@ def _wire_plan_key(level: float, L: int, wire_block: int, wire_dtype: str,
 
 def _wire_plans(sender_levels, L: int, wire_block: int, wire_dtype: str,
                 dense_itemsize: int):
-    """Group senders by their static encode key -> [(key, src | None)].
+    """Group senders by their static encode key -> [(key, src|None, None)].
 
     ``sender_levels``: per-SENDER theta levels (one per shard for the
     structured mesh layouts, one per cluster row off-mesh).  Senders that
     share a key share one payload + one (possibly partial) rotation;
     ``src`` is None when a single key covers every sender (the uniform
-    fast path — full rotation, no filtering)."""
+    fast path — full rotation, no filtering).  The trailing None is the
+    ``rows`` slot of the 3-tuple plan format (see ``_wire_plans_b``): these
+    plans always ship every local row."""
     groups: dict = {}
     for s, lvl in enumerate(sender_levels):
         key = _wire_plan_key(float(lvl), L, wire_block, wire_dtype,
@@ -557,7 +559,40 @@ def _wire_plans(sender_levels, L: int, wire_block: int, wire_dtype: str,
     for key in sorted(groups):
         src = groups[key]
         plans.append((key, None if len(src) == len(sender_levels)
-                      else frozenset(src)))
+                      else frozenset(src), None))
+    return plans
+
+
+def _wire_plans_b(cluster_theta, n: int, Cl: int, *, L: int, wire_block: int,
+                  wire_dtype: str, dense_itemsize: int):
+    """Layout B per-ROW wire plans -> [(key, src | None, rows | None)].
+
+    Each shard holds Cl whole cluster rows whose levels may differ.  Every
+    (shard, row) slot is keyed by its OWN level's encode key — no
+    escalation to the shard max — and shards shipping the identical
+    (key, row-subset) share one plan: a payload of just those rows, one
+    (possibly partial) rotation, and a static receiver-side re-assembly
+    into the full Cl-row layout (non-member rows decode to zero
+    contributions; see the layout-B ``rot`` in
+    ``sparse_neighbor_exchange``).  ``rows`` is None when the subset is
+    every row (the aligned case — reduces to the old full-payload stitch),
+    and uniform levels reduce to the single-plan fast path exactly."""
+    shard_rows = []
+    for j in range(n):
+        by_key: dict = {}
+        for r in range(Cl):
+            key = _wire_plan_key(float(cluster_theta[j * Cl + r]), L,
+                                 wire_block, wire_dtype, dense_itemsize)
+            by_key.setdefault(key, []).append(r)
+        shard_rows.append({k: tuple(v) for k, v in by_key.items()})
+    groups: dict = {}
+    for j, by_key in enumerate(shard_rows):
+        for key, rows in by_key.items():
+            groups.setdefault((key, rows), []).append(j)
+    plans = []
+    for (key, rows), src in sorted(groups.items()):
+        plans.append((key, None if len(src) == n else frozenset(src),
+                      None if len(rows) == Cl else rows))
     return plans
 
 
@@ -617,7 +652,8 @@ def _roll_rows(C):
     """Off-mesh rotate: roll rows, zeroing rows whose SOURCE row is outside
     the plan's sender set (mirrors ppermute's zero-fill for partial perms,
     so the off-mesh path computes the exact same operator)."""
-    def rot(tree, o, src=None):
+    def rot(tree, o, src=None, rows=None):
+        assert rows is None  # off-mesh senders are single rows
         rolled = jax.tree.map(lambda v: jnp.roll(v, o, axis=0), tree)
         if src is None:
             return rolled
@@ -629,6 +665,23 @@ def _roll_rows(C):
     return rot
 
 
+def _stale_row_select(fresh, stale_means, cl, stale_clusters, C: int):
+    """Per-row select of the OUTGOING gossip payload: clusters in the
+    static ``stale_clusters`` set ship their stale-by-1 mean, the rest ship
+    fresh (DESIGN.md §Overlap contract).  All-stale short-circuits to the
+    pure stale buffer so the encode + band rotations carry no data
+    dependence on this round's local compute (the overlap HLO property);
+    partial-stale keeps the select (fresh senders' payloads still wait on
+    compute — documented reduced overlap)."""
+    mask = np.zeros(C, np.bool_)
+    mask[np.asarray(sorted(int(c) for c in stale_clusters), np.int64)] = True
+    if mask.all():
+        return stale_means
+    m = jnp.take(jnp.asarray(mask), cl)
+    return jnp.where(m.reshape(m.shape + (1,) * (fresh.ndim - m.ndim)),
+                     stale_means, fresh)
+
+
 def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                              k: Optional[int] = None,
                              theta: Optional[float] = None,
@@ -638,7 +691,8 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                              wire_dtype: str = "f32",
                              wire_block: int = 1024,
                              intra_done: bool = False,
-                             alive=None, conn=None):
+                             alive=None, conn=None,
+                             stale=None, stale_clusters=None):
     """Gossip mix where only compact wire-encoded deltas cross the backhaul.
 
     delta: (R_local, *dims) shard-local replica deltas.  Each cluster's
@@ -663,11 +717,13 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
         only that group's edges (non-destinations receive zeros, which
         decode to zero contributions), so total gossip bytes track the
         level-vector sum instead of R * max(level).  Granularity is the
-        sending SHARD: exact per-cluster for layout A (one cluster per
-        shard group); layout B escalates each shard's clusters to the
-        shard's max level.  Multi-axis replica dims cannot sender-filter
-        the relayed flat rotations and conservatively collapse to the max
-        level (documented wire-savings loss, math unchanged).
+        individual CLUSTER in both structured layouts: layout A ships one
+        row per shard group, and layout B builds per-ROW plans
+        (``_wire_plans_b``) so clusters sharing a shard at different
+        levels each ship a payload sized by their own level.  Multi-axis
+        replica dims cannot sender-filter the relayed flat rotations and
+        conservatively collapse to the max level (documented wire-savings
+        loss, math unchanged).
 
     ``intra_done=True`` asserts the rows are already intra-cluster means
     (replicated within each cluster, e.g. the output of
@@ -695,11 +751,33 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     round-trip, which preserves the sparse operator's math (but not its
     wire savings — same contract as ``mix_local``'s psum fallback).
 
+    ``stale`` / ``stale_clusters`` (DESIGN.md §Overlap contract): the
+    bounded-staleness payload buffer.  ``stale`` is an array shaped like
+    ``delta`` holding the stale-by-1 intra means (replicated within each
+    cluster, like ``intra_done`` rows); ``stale_clusters`` is the STATIC
+    set of cluster indices whose OUTGOING band payload is taken from
+    ``stale`` instead of the fresh rows.  The self term always uses the
+    fresh mean (it never crosses the wire), so a stale cluster's
+    neighbors mix its stale-by-1 model while it still folds its own
+    fresh compute — bounded-stale gossip.  Requires ``intra_done=True``
+    (both buffers are already per-cluster means).
+
     Returns the locally mixed deltas, same shape/dtype as ``delta``.
     """
     axes = _axes_tuple(axes)
     C, Dev = clusters, dev
     conn = _conn_or_none(conn)
+    if (stale is None) != (stale_clusters is None):
+        raise ValueError("stale= and stale_clusters= go together")
+    if stale is not None:
+        if not intra_done:
+            raise ValueError("stale= requires intra_done=True rows")
+        stale_clusters = tuple(sorted(int(c) for c in stale_clusters))
+        if not stale_clusters or not all(0 <= c < C
+                                         for c in stale_clusters):
+            raise ValueError(
+                f"stale_clusters {stale_clusters} not a non-empty subset "
+                f"of range({C})")
     if alive is not None and not intra_done:
         # premultiplied rows make every downstream mean the live-device
         # mean through the UNCHANGED unmasked graph (see
@@ -736,9 +814,9 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     elif k is not None:
         k_b = max(1, min(wb, int(np.ceil(int(k) * wb / L))))
         plans = [(_wire_plan_key_from_kb(k_b, L, wire_block, wire_dtype,
-                                         dense_itemsize), None)]
-    if (plans is not None and len(plans) == 1 and plans[0] == (("dense",),
-                                                               None)
+                                         dense_itemsize), None, None)]
+    if (plans is not None and len(plans) == 1
+            and plans[0] == (("dense",), None, None)
             and not intra_done):
         # Uniform dense fallback end-to-end IS the dense banded mix:
         # delegate so theta = 1 is bit-for-bit identical to ``mix_local``
@@ -753,9 +831,15 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     if not axes:
         xb = f32.reshape((C, Dev) + dims)
         means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(C, L)
+        send = means
+        if stale is not None:
+            smeans = stale.astype(jnp.float32).reshape(
+                (C, Dev) + dims)[:, 0].reshape(C, L)
+            send = _stale_row_select(means, smeans, jnp.arange(C),
+                                     stale_clusters, C)
         if cluster_theta is not None:
             plans = _wire_plans(cluster_theta, **plan_kw)
-        y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind,
+        y = _sparse_mix_rows(send, means, jnp.arange(C), C, hkind,
                              p_edge, seed, rotate=_roll_rows(C),
                              plans=plans, conn=conn, **wire_kw)
         y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
@@ -780,25 +864,31 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                     s = _group_allreduce_sum(s, axes[-1], sizes[-1], g)
                 mean = (s / Dev)[None]
             cl = (_flat_shard_index(axes) // g)[None]
+            send = mean
+            if stale is not None:
+                smean = stale.astype(jnp.float32)[0].reshape(L)[None]
+                send = _stale_row_select(mean, smean, cl, stale_clusters, C)
             if cluster_theta is not None:
                 # sender shard j belongs to cluster j // g: exact
                 # per-cluster wire levels (single axis guaranteed here).
                 plans = _wire_plans([cluster_theta[j // g]
                                      for j in range(n)], **plan_kw)
 
-            def rot(t, o, src=None):
+            def rot(t, o, src=None, rows=None):
+                assert rows is None  # layout A ships one row per shard
                 if src is None:
                     return _rotate_flat(t, axes, o * g, sizes)
                 return _rotate(t, axes[0], o * g, n, src=src)
 
-            y = _sparse_mix_rows(mean, mean, cl, C, hkind, p_edge, seed,
+            y = _sparse_mix_rows(send, mean, cl, C, hkind, p_edge, seed,
                                  rot, plans=plans, conn=conn, **wire_kw)
             y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
             return y.astype(delta.dtype)
         return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
                                 hkind, p_edge, seed, plans=plans,
                                 cluster_theta=cluster_theta,
-                                plan_kw=plan_kw, conn=conn,
+                                plan_kw=plan_kw, conn=conn, stale=stale,
+                                stale_clusters=stale_clusters,
                                 **wire_kw).reshape(delta.shape).astype(
                                     delta.dtype)
 
@@ -808,27 +898,52 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
         xb = f32.reshape((Cl, Dev) + dims)
         means = (xb[:, 0] if intra_done else xb.mean(axis=1)).reshape(Cl, L)
         cl = _flat_shard_index(axes) * Cl + jnp.arange(Cl)
+        send = means
+        if stale is not None:
+            smeans = stale.astype(jnp.float32).reshape(
+                (Cl, Dev) + dims)[:, 0].reshape(Cl, L)
+            send = _stale_row_select(means, smeans, cl, stale_clusters, C)
         if cluster_theta is not None:
-            # one payload per shard carries Cl rows -> sender granularity
-            # is the SHARD: escalate to the max level among its clusters.
-            plans = _wire_plans(
-                [max(cluster_theta[j * Cl:(j + 1) * Cl])
-                 for j in range(n)], **plan_kw)
+            # per-ROW plans: every cluster row's payload is sized by its
+            # OWN level; shards sharing a (key, row-subset) share a plan
+            # (subset payload + partial rotation + static re-assembly).
+            plans = _wire_plans_b(cluster_theta, n, Cl, **plan_kw)
 
-        def rot(tree, o, src=None):
+        def rot(tree, o, src=None, rows=None):
             q, rm = divmod(o, Cl)
             r1 = (lambda t, s: _rotate_flat(t, axes, s, sizes)) \
                 if src is None else \
                 (lambda t, s: _rotate(t, axes[0], s, n, src=src))
             r_q = r1(tree, q)
-            if rm == 0:
-                return r_q
-            r_q1 = r1(tree, q + 1)
-            return jax.tree.map(
-                lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]],
-                                             axis=0), r_q1, r_q)
+            if rows is None:
+                if rm == 0:
+                    return r_q
+                r_q1 = r1(tree, q + 1)
+                return jax.tree.map(
+                    lambda a, b: jnp.concatenate([a[Cl - rm:], b[:Cl - rm]],
+                                                 axis=0), r_q1, r_q)
+            # subset payload (per-row plans): the rotated arrays carry only
+            # the plan's member source rows; re-assemble the full Cl-row
+            # layout statically — output row i takes source row (i-rm)%Cl
+            # from the q+1 (i < rm, wrapped a shard boundary) or q
+            # rotation, and rows outside the plan stay zero (they decode
+            # to zero contributions; another plan delivers them).
+            pos = {r: p for p, r in enumerate(rows)}
+            leaves_q, treedef = jax.tree.flatten(r_q)
+            leaves_q1 = jax.tree.leaves(r1(tree, q + 1)) if rm \
+                else leaves_q
+            out = []
+            for aq, aq1 in zip(leaves_q, leaves_q1):
+                stacked = []
+                for i in range(Cl):
+                    sr = (i - rm) % Cl
+                    a = aq1 if i < rm else aq
+                    stacked.append(a[pos[sr]] if sr in pos
+                                   else jnp.zeros_like(aq[0]))
+                out.append(jnp.stack(stacked, axis=0))
+            return jax.tree.unflatten(treedef, out)
 
-        y = _sparse_mix_rows(means, means, cl, C, hkind, p_edge, seed, rot,
+        y = _sparse_mix_rows(send, means, cl, C, hkind, p_edge, seed, rot,
                              plans=plans, conn=conn, **wire_kw)
         y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
         return y.reshape(delta.shape).astype(delta.dtype)
@@ -836,14 +951,16 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
                             p_edge, seed, plans=plans,
                             cluster_theta=cluster_theta, plan_kw=plan_kw,
-                            conn=conn,
+                            conn=conn, stale=stale,
+                            stale_clusters=stale_clusters,
                             **wire_kw).reshape(delta.shape).astype(
                                 delta.dtype)
 
 
 def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
                      *, plans, wb, wire_dtype, dense_dtype,
-                     cluster_theta=None, plan_kw=None, conn=None):
+                     cluster_theta=None, plan_kw=None, conn=None,
+                     stale=None, stale_clusters=None):
     """Misaligned (C, Dev) layouts: masked psum of the dense cluster means,
     then the sparse operator applied LOCALLY (encode/decode round-trip on
     the neighbor terms).  Math identical to the structured paths; wire
@@ -858,9 +975,17 @@ def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
     part = jnp.tensordot(onehot, f32_rows, axes=(0, 0))
     sums = jax.lax.psum(part, axes)  # (C, L) cluster sums (or Dev * mean)
     means = sums / Dev
+    send = means
+    if stale is not None:
+        spart = jnp.tensordot(
+            onehot, stale.astype(jnp.float32).reshape(R_local, L),
+            axes=(0, 0))
+        smeans = jax.lax.psum(spart, axes) / Dev
+        send = _stale_row_select(means, smeans, jnp.arange(C),
+                                 stale_clusters, C)
     if cluster_theta is not None:
         plans = _wire_plans(cluster_theta, **plan_kw)
-    y = _sparse_mix_rows(means, means, jnp.arange(C), C, hkind, p_edge,
+    y = _sparse_mix_rows(send, means, jnp.arange(C), C, hkind, p_edge,
                          seed, rotate=_roll_rows(C), plans=plans,
                          wb=wb, wire_dtype=wire_dtype,
                          dense_dtype=dense_dtype, conn=conn)
@@ -873,11 +998,18 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
     """Shared core: encode rows per wire plan, rotate each plan's payload
     per band (partial perms for per-cluster level groups), decode, sum.
 
-    means/self_dense: (m, L) cluster means (compressed vs self term);
-    rotate(tree, o, src) returns the band-o rotated pytree of row arrays,
-    shipping only from the static sender set ``src`` (None = all);
-    plans: [(("wire", k_b) | ("dense",), src)] from ``_wire_plans`` — a
-    ("dense",) plan ships the rows uncompressed in ``dense_dtype``.
+    means/self_dense: (m, L) cluster means (compressed vs self term —
+    they differ under bounded staleness, where the wire payload comes
+    from the stale buffer but the self fold stays fresh);
+    rotate(tree, o, src, rows) returns the band-o rotated pytree of row
+    arrays, shipping only from the static sender set ``src`` (None =
+    all) and re-assembling subset-row payloads (``rows``, layout B per-
+    row plans) into the full local row layout;
+    plans: [(("wire", k_b) | ("dense",), src, rows)] from
+    ``_wire_plans`` / ``_wire_plans_b`` — a ("dense",) plan ships the
+    rows uncompressed in ``dense_dtype``, and a non-None ``rows`` plan
+    encodes only those local rows (each row's payload sized by its own
+    level instead of the shard max).
 
     ``conn``: (C,) replicated backhaul mask.  The band-o source conn at
     receiver c is ``conn[(c - o) % C]`` — INDEXED, never rotated, so
@@ -890,21 +1022,24 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
     m, L = means.shape
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
     payloads = []
-    for key, src in plans:
+    for key, src, rows in plans:
+        rows_x = means if rows is None else jnp.take(
+            means, np.asarray(rows, np.int64), axis=0)
         if key[0] == "dense":
-            payloads.append(((means.astype(dense_dtype),), None, src))
+            payloads.append(((rows_x.astype(dense_dtype),), None, src,
+                             rows))
         else:
             payloads.append((tuple(wire_encode(
-                means, key[1], wire_block=wb, wire_dtype=wire_dtype)),
-                key[1], src))
+                rows_x, key[1], wire_block=wb, wire_dtype=wire_dtype)),
+                key[1], src, rows))
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
     cw = None if conn is None else jnp.asarray(conn, jnp.float32)
     y = take(diag)[:, None] * self_dense
     absorbed = None
     for o, coef in sorted(bands.items()):
         c_o = None if cw is None else jnp.take(cw, (cl - o) % C)
-        for payload, k_b, src in payloads:
-            moved = rotate(payload, o, src)
+        for payload, k_b, src, rows in payloads:
+            moved = rotate(payload, o, src, rows)
             if k_b is None:
                 dec = moved[0].astype(jnp.float32)
             else:

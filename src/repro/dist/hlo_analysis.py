@@ -377,6 +377,99 @@ def check_cluster_gossip_bytes(
             "byte_win": (1.0 - got / base) if base else 0.0}
 
 
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_TOKEN_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def _free_permute_split(hlo: str) -> Tuple[float, float]:
+    """-> (free_bytes, total_bytes) pair-weighted collective-permute
+    payloads in the ENTRY computation, split by whether the permute sits
+    DOWNSTREAM of any while loop.
+
+    "Free" permutes have no transitive data dependence on a while-loop
+    result: XLA's scheduler may issue them concurrently with the loop (the
+    local-step scan), which is the overlap property the bounded-staleness
+    engine promises — its gossip payload is a step INPUT (the pending
+    buffer), so the encode + band rotations hang off the parameters, not
+    the scan.  Taint propagates through the entry def-use graph (operand
+    tokens intersected with the known instruction names, so attribute
+    noise like source_target_pairs never aliases); a call/conditional
+    inherits its operands' taint and contributes its callee's permute
+    bytes at that taint; permutes INSIDE a while body are never free
+    (they run on the loop's serial path)."""
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(stripped)
+            entry = m.group(1) if m else None
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c]), default=None)
+    lines = comps.get(entry, [])
+    defs: Dict[str, str] = {}
+    order: List[str] = []
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = line
+            order.append(m.group(1))
+    known = set(defs)
+    tainted: set = set()
+    free = total = 0.0
+    for name in order:
+        line = defs[name]
+        op, rbytes, _, _ = _instr_stats(line)
+        args = line.split("(", 1)[1] if "(" in line else ""
+        ops_in = {t for t in _TOKEN_RE.findall(args)
+                  if t in known and t != name}
+        is_while = " while(" in line
+        if is_while or (ops_in & tainted):
+            tainted.add(name)
+        base = op.removesuffix("-start").removesuffix("-done")
+        if base == "collective-permute" and not op.endswith("-done"):
+            b = rbytes * _permute_pairs(line)
+            total += b
+            if name not in tainted:
+                free += b
+        for c in _called_computations(line):
+            if is_while:
+                continue  # loop-internal permutes ride the serial path
+            b = _permute_bytes_in(comps, c)
+            total += b
+            if name not in tainted:
+                free += b
+    return free, total
+
+
+def check_gossip_overlap(hlo: str, sync_hlo: str = None) -> Dict[str, object]:
+    """Verify the overlapped round engine's HLO really breaks the
+    gossip -> local-step dependency (DESIGN.md §Overlap contract).
+
+    hlo: the staleness=1 all-stale gossip-round lowering; sync_hlo:
+    optionally the synchronous gossip-round lowering of the same cell.
+
+    ok iff the overlap program carries collective-permute traffic with NO
+    data dependence on the local-step while loop (free bytes > 0 — the
+    stale payload's band rotations hang off the pending-buffer input) and,
+    when ``sync_hlo`` is given, the synchronous program's permutes are ALL
+    loop-dependent (free bytes == 0 — gossip on the critical path), so
+    the verdict detects the actual dependency break rather than an
+    accidentally loop-free program shape.
+    """
+    free, total = _free_permute_split(hlo)
+    ok = total > 0 and free > 0
+    out = {"free_permute_bytes": free, "total_permute_bytes": total,
+           "free_fraction": free / total if total else 0.0}
+    if sync_hlo is not None:
+        sfree, stotal = _free_permute_split(sync_hlo)
+        out["sync_free_permute_bytes"] = sfree
+        out["sync_total_permute_bytes"] = stotal
+        ok = ok and stotal > 0 and sfree == 0.0
+    out["ok"] = ok
+    return out
+
+
 def check_no_full_leaf_allgather(hlo: str, sharded_leaf_bytes,
                                  slack: float = 0.5) -> Dict[str, float]:
     """Assert the fused path never all-gathers a model-sharded leaf.

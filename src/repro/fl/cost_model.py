@@ -88,6 +88,87 @@ def round_time(rho, theta, mu, nu, tau, cluster_of, *, backhaul=0.0,
     return t, per_cluster
 
 
+def overlap_round_time(rho, theta, mu, nu, tau, cluster_of, *,
+                       backhaul=0.0, gossip=False, wire_dtype=None,
+                       wire_block=1024, dense_bits=16, alive=None,
+                       conn=None, stale_clusters=(), fold=0.0):
+    """Expected wall time of one edge round under the OVERLAPPED engine
+    (DESIGN.md §Overlap contract).
+
+    A stale cluster's gossip payload is its start-of-round pending buffer,
+    so its backhaul transfer runs CONCURRENTLY with the tau local steps:
+    the cluster costs max(compute, gossip) + fold instead of
+    compute + gossip.  Clusters NOT in ``stale_clusters`` ship fresh means
+    and keep the serial sum (their payload waits on compute).  On
+    non-gossip rounds (or with no wire to hide) this is exactly
+    ``round_time``.  ``fold`` is the constant staleness-boundary cost
+    (decode + mix fold — bandwidth-bound local work, typically small).
+    Returns (round_time, per_cluster_times) like ``round_time``.
+    """
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    per_dev = rho * tau * mu + eff * nu
+    m = int(cluster_of.max()) + 1
+    live = (np.ones(len(per_dev), bool) if alive is None
+            else np.asarray(alive, bool))
+    compute = np.array([
+        per_dev[(cluster_of == i) & live].max(initial=0.0)
+        for i in range(m)])
+    if not gossip:
+        t = float(compute.max())
+        return t, compute
+    eff_c = (np.array([eff[(cluster_of == i) & live].max(initial=0.0)
+                       for i in range(m)])
+             if wire_dtype else np.ones(m))
+    if conn is not None:
+        eff_c = eff_c * np.asarray(conn, np.float64)
+    wire = float(backhaul) * eff_c
+    stale = np.zeros(m, bool)
+    if len(stale_clusters):
+        stale[np.asarray(sorted(stale_clusters), np.int64)] = True
+    per_cluster = np.where(stale, np.maximum(compute, wire) + float(fold),
+                           compute + wire)
+    t = float(per_cluster.max())
+    return t, per_cluster
+
+
+def decide_stale_clusters(rho, theta, mu, nu, tau, cluster_of, *,
+                          backhaul=0.0, wire_dtype=None, wire_block=1024,
+                          dense_bits=16, alive=None, quantile=0.9):
+    """Which clusters should run stale this gossip round.
+
+    Reuses ``runtime.failover.straggler_deadline``'s machinery: the
+    compute window is the ``quantile`` of live per-device round times (the
+    same deadline the chaos fault plan holds stragglers to), and a cluster
+    whose backhaul gossip transfer (its own wire level — the per-cluster
+    sender-sized edge) does NOT fit in the slack before that deadline
+    runs stale: its neighbors mix its stale-by-1 model instead of waiting.
+    Clusters whose transfer fits ship fresh.  Returns a sorted tuple of
+    cluster ids (possibly empty — then the overlapped engine degrades to
+    the synchronous program).
+    """
+    from repro.runtime.failover import straggler_deadline
+
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    per_dev = rho * tau * mu + eff * nu
+    deadline = straggler_deadline(per_dev, 1, quantile=quantile,
+                                  alive=alive)
+    if not np.isfinite(deadline):
+        return ()
+    m = int(cluster_of.max()) + 1
+    live = (np.ones(len(per_dev), bool) if alive is None
+            else np.asarray(alive, bool))
+    out = []
+    for i in range(m):
+        sel = (cluster_of == i) & live
+        compute = per_dev[sel].max(initial=0.0)
+        eff_i = eff[sel].max(initial=0.0) if wire_dtype else 1.0
+        if compute + float(backhaul) * eff_i > deadline:
+            out.append(i)
+    return tuple(out)
+
+
 def round_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
                  wire_block=1024, dense_bits=16, alive=None):
     """Expected total energy of one edge round (sum over devices).

@@ -82,9 +82,13 @@ def topk_compress(x, theta, *, block=1024, impl=None, ef=None):
     if ef is not None:
         xf = xf + ef.astype(jnp.float32)
     mask_fn = ref.topk_mask_exact if r == "ref" else ref.topk_mask_bisect_jnp
-    masked, _ = mask_fn(xf, theta[:, None], block=block)
+    masked, keep = mask_fn(xf, theta[:, None], block=block)
     resid_dtype = x.dtype if ef is None else ef.dtype
-    return masked.astype(x.dtype), (xf - masked).astype(resid_dtype)
+    # bit-identical to xf - masked (kept: x - x == +0, dropped: x - 0 ==
+    # x) without re-reading the f32 masked array — the keep mask is 1/4
+    # the bytes.
+    resid = jnp.where(keep, jnp.float32(0), xf)
+    return masked.astype(x.dtype), resid.astype(resid_dtype)
 
 
 def rglru(log_a, gated_x, *, h0=None, impl=None):

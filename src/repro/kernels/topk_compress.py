@@ -34,7 +34,8 @@ def _mask_tile(x, theta, masked_ref, resid_ref, *, block, rows):
     mag = jnp.abs(x)
     k = jnp.clip(jnp.ceil(theta * block), 1.0, float(block))
     lo = jnp.zeros((rows, 1), jnp.float32)
-    hi = mag.max(axis=-1, keepdims=True)
+    hi0 = mag.max(axis=-1, keepdims=True)
+    hi = hi0
 
     def body(i, lohi):
         lo, hi = lohi
@@ -51,13 +52,17 @@ def _mask_tile(x, theta, masked_ref, resid_ref, *, block, rows):
     # fewer than k elements, violating the contraction property (Eq. 7) —
     # found by hypothesis (tests/test_properties.py).
     keep = mag > lo
-    # guarantee at least the max element of each block is kept
-    is_max = mag >= mag.max(axis=-1, keepdims=True)
-    none_kept = keep.sum(axis=-1, keepdims=True) == 0
-    keep = keep | (is_max & none_kept)
+    # guarantee at least the max element of each block is kept.  "nothing
+    # kept" only happens at lo == 0 on an all-zero block (the invariant
+    # keeps > k elements whenever lo > 0), so testing hi0 == 0 replaces a
+    # full keep.sum recount pass.
+    keep = keep | ((mag >= hi0) & (hi0 == 0.0))
     masked = jnp.where(keep, x, 0.0)
     masked_ref[0] = masked.astype(masked_ref.dtype)
-    resid_ref[0] = (x - masked).astype(resid_ref.dtype)
+    # residual via the SAME mask (bit-identical to x - masked: kept lanes
+    # give x - x == +0.0, dropped lanes x - 0 == x) — reads the i1 mask
+    # instead of a second f32 pass over masked.
+    resid_ref[0] = jnp.where(keep, 0.0, x).astype(resid_ref.dtype)
 
 
 def _kernel(theta_ref, x_ref, masked_ref, resid_ref, *, block, rows):
@@ -73,14 +78,20 @@ def _kernel_ef(theta_ref, x_ref, ef_ref, masked_ref, resid_ref, *, block,
                rows=rows)
 
 
-def _pick_rows(nb: int, rows: int, itemsize: int) -> int:
-    """Largest divisor of nb <= the dtype-native sublane count.
+def _pick_rows(nb: int, rows: int, itemsize: int, block: int = 1024) -> int:
+    """Largest divisor of nb <= the VMEM tile target.
 
-    bf16/int8 tiles want 16/32 sublanes (pallas_guide §Tiling); f32 keeps
-    the historical 8.  Falling back to smaller divisors keeps any nb legal
-    (pallas pads sub-tile shapes, at some efficiency cost).
+    The sublane FLOOR follows dtype-native tiling (pallas_guide §Tiling):
+    f32 8, bf16 16, int8 32.  On top of the floor the tile grows toward
+    ~256 KiB so the grid has fewer, fatter cells (each cell re-runs the
+    16-iteration bisection preamble; fat tiles amortize it and keep the
+    DMA pipeline busy).  Worst case VMEM: 4 tiles (x, ef, masked, resid)
+    x 2 double-buffered = 2 MiB, far under the ~16 MiB budget.  Falling
+    back to smaller divisors keeps any nb legal (pallas pads sub-tile
+    shapes, at some efficiency cost).
     """
-    target = max(rows, (4 * rows) // max(itemsize, 1))
+    floor = max(rows, (4 * rows) // max(itemsize, 1))
+    target = max(floor, (1 << 18) // max(block * itemsize, 1))
     rows = min(target, nb)
     while nb % rows:
         rows -= 1
@@ -99,7 +110,7 @@ def topk_compress_pallas(x, theta, *, ef=None, block=1024, rows=8,
     R, L = x.shape
     assert L % block == 0, (L, block)
     nb = L // block
-    rows = _pick_rows(nb, rows, jnp.dtype(x.dtype).itemsize)
+    rows = _pick_rows(nb, rows, jnp.dtype(x.dtype).itemsize, block)
     xb = x.reshape(R, nb, block)
     theta2 = theta.reshape(R, 1).astype(jnp.float32)
 

@@ -16,12 +16,14 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.base import ShapeConfig
-from repro.core.round import (FLState, abstract_state, make_prefill_step,
+from repro.configs.base import FLTopology, HCEFConfig, ShapeConfig
+from repro.core.round import (FLState, OverlapState, abstract_state,
+                              make_overlap_round_step, make_prefill_step,
                               make_round_step, make_serve_step)
 from repro.dist.hlo_analysis import (analyze_hlo,
                                      check_cluster_gossip_bytes,
                                      check_gossip_bytes_scale_with_theta,
+                                     check_gossip_overlap,
                                      check_no_full_leaf_allgather,
                                      sharded_leaf_bytes)
 from repro.dist.policies import Policy, make_serve_policy, make_train_policy
@@ -84,16 +86,71 @@ def _batch_shardings(policy: Policy, batch_abs):
     return jax.tree_util.tree_map(rule, batch_abs)
 
 
+def overlap_equivalence_smoke():
+    """Executed staleness=0 contract (DESIGN.md §Overlap): the overlapped
+    engine's synchronous-delegation path must reproduce the plain round
+    step BIT-FOR-BIT on a small sharded smoke cell."""
+    from repro.configs import smoke_model
+    from repro.core.round import init_state
+    from repro.dist.compat import make_mesh
+
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0, sparse_gossip=True)
+    R = topo.num_devices
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    rho = jnp.ones(R)
+    theta = jnp.full(R, 0.25)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    levels = (0.1, 1.0)
+
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    put = lambda t: jax.tree.map(
+        lambda x, s: jax.device_put(x, s), t,
+        policy.param_shardings(t, stacked=True))
+    state = FLState(params=put(state.params), momentum=None,
+                    ef=put(state.ef), round_idx=state.round_idx)
+    hcef_ov = dataclasses.replace(hcef, overlap=True, staleness=0)
+    step_sync = jax.jit(make_round_step(cfg, hcef, topo, policy,
+                                        gossip=True, cluster_levels=levels))
+    step_ov = jax.jit(make_overlap_round_step(cfg, hcef_ov, topo, policy,
+                                              gossip=True,
+                                              cluster_levels=levels))
+    with mesh:
+        s_ref, _ = step_sync(state, batch, rho, theta, keys)
+        o, _ = step_ov(OverlapState(fl=state, pending=state.params),
+                       batch, rho, theta, keys)
+    equal = all(
+        bool(jnp.array_equal(a, b))
+        for ra, rb in ((s_ref.params, o.fl.params), (s_ref.ef, o.fl.ef),
+                       (o.fl.params, o.pending))
+        for a, b in zip(jax.tree.leaves(ra), jax.tree.leaves(rb)))
+    return {"ok": equal}
+
+
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                verbose: bool = True, sparse_gossip: bool = False,
-               theta_spread: str = None):
+               theta_spread: str = None, overlap: bool = False):
     """``theta_spread``: comma-separated theta levels assigned round-robin
     to the clusters (e.g. "0.05,0.8") — lowers the train cell with the
     PER-CLUSTER static dispatch, plus an all-max baseline and a
     gossip=False (intra-only) program, and emits the
     ``cluster_gossip_bytes`` verdict: the heterogeneous program's gossip
     collective-permute bytes must beat the baseline and track the
-    level-vector sum (DESIGN.md §Static-k)."""
+    level-vector sum (DESIGN.md §Static-k).
+
+    ``overlap``: additionally lowers the OVERLAPPED staleness=1 round
+    (all clusters stale, static per-cluster dispatch — the traced-theta
+    lax.switch would drag the permutes into the conditional) next to the
+    synchronous gossip round, and emits the ``gossip_overlap`` verdict:
+    the overlap program's gossip collective-permutes must carry no data
+    dependence on the local-step loop while the synchronous program's all
+    do (DESIGN.md §Overlap contract), plus an executed staleness=0
+    bit-for-bit equivalence smoke."""
     bundle = get_config(arch)
     cfg = bundle.model
     hcef = bundle.hcef
@@ -117,7 +174,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         jax.eval_shape(lambda: model0.init(cfg, jax.random.PRNGKey(0)))))
     serve_extra = dpx if pcount * 2 / 16 > 12e9 else ()
 
-    cluster_levels = extra_jits = None
+    cluster_levels = extra_jits = overlap_jits = None
     if shape.kind == "train":
         topo = bundle.fl_multi if multi_pod else bundle.fl_single
         topo.validate(int(np.prod([mesh.shape[a] for a in dpx])))
@@ -167,6 +224,38 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             }
         jitted = mk_jitted(levels=cluster_levels)
         args = (state_abs, batch_abs, rho_abs, rho_abs, key_abs)
+        if overlap:
+            # overlap verdict programs: staleness=1 all-stale vs the
+            # synchronous gossip round, both sparse + static per-cluster
+            # levels (a traced-theta switch would make every permute
+            # conditional-dependent and defeat the taint analysis).
+            C = topo.clusters
+            grid = sorted(hcef.theta_levels)
+            ov_levels = cluster_levels or tuple(
+                grid[i % len(grid)] for i in range(C))
+            hcef_sp = dataclasses.replace(hcef, sparse_gossip=True)
+            hcef_ov = dataclasses.replace(hcef_sp, overlap=True, staleness=1)
+            ov_state_abs = OverlapState(fl=state_abs,
+                                        pending=state_abs.params)
+            ov_state_sh = OverlapState(fl=state_sh, pending=state_sh.params)
+            overlap_jits = {
+                "overlap": (jax.jit(
+                    make_overlap_round_step(cfg, hcef_ov, topo, policy,
+                                            gossip=True,
+                                            cluster_levels=ov_levels),
+                    in_shardings=(ov_state_sh, batch_sh, ctl_sh, ctl_sh,
+                                  key_sh),
+                    out_shardings=(ov_state_sh, None),
+                    donate_argnums=(0,)),
+                    (ov_state_abs, batch_abs, rho_abs, rho_abs, key_abs)),
+                "sync": (jax.jit(
+                    make_round_step(cfg, hcef_sp, topo, policy, gossip=True,
+                                    cluster_levels=ov_levels),
+                    in_shardings=(state_sh, batch_sh, ctl_sh, ctl_sh,
+                                  key_sh),
+                    out_shardings=(state_sh, None),
+                    donate_argnums=(0,)), args),
+            }
     elif shape.kind == "prefill":
         policy = make_serve_policy(mesh, dp_axes=dpx, kind="prefill",
                                    extra_fsdp=serve_extra)
@@ -210,6 +299,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if extra_jits:
             for name, j in extra_jits.items():
                 extra_hlo[name] = j.lower(*args).compile().as_text()
+        overlap_hlo = {}
+        if overlap_jits:
+            for name, (j, a) in overlap_jits.items():
+                overlap_hlo[name] = j.lower(*a).compile().as_text()
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
@@ -217,7 +310,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hstats = analyze_hlo(hlo)
     n_chips = int(np.prod(list(mesh.shape.values())))
 
-    agcheck = gossipcheck = clustercheck = None
+    agcheck = gossipcheck = clustercheck = overlapcheck = ovsmoke = None
     if shape.kind == "train":
         # the fused compress+mix path must never re-materialize a
         # model-sharded leaf: no single all-gather the size of a full leaf.
@@ -252,6 +345,17 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             if not gossipcheck["ok"]:
                 print(f"WARNING {arch}/{shape_name}: gossip wire bytes do "
                       f"not scale with theta: {gossipcheck['switches']}")
+        if overlap_hlo:
+            overlapcheck = check_gossip_overlap(overlap_hlo["overlap"],
+                                                sync_hlo=overlap_hlo["sync"])
+            if not overlapcheck["ok"]:
+                print(f"WARNING {arch}/{shape_name}: gossip permutes are "
+                      f"NOT off the local-step critical path: "
+                      f"{overlapcheck}")
+            ovsmoke = overlap_equivalence_smoke()
+            if not ovsmoke["ok"]:
+                print(f"WARNING {arch}/{shape_name}: staleness=0 overlapped "
+                      f"round is not bit-for-bit the synchronous round")
 
     result = {
         "arch": arch, "shape": shape_name,
@@ -279,6 +383,18 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         result["no_full_leaf_allgather"] = agcheck
     if gossipcheck is not None:
         result["gossip_bytes_scale_with_theta"] = gossipcheck
+    if overlapcheck is not None:
+        result["gossip_overlap"] = overlapcheck
+        result["overlap_equivalence"] = ovsmoke
+        if verbose:
+            print(f"  gossip overlap: "
+                  f"free={overlapcheck['free_permute_bytes']:.3e} / "
+                  f"{overlapcheck['total_permute_bytes']:.3e} B "
+                  f"({100 * overlapcheck['free_fraction']:.1f}% off the "
+                  f"local-step path; sync free="
+                  f"{overlapcheck['sync_free_permute_bytes']:.3e}) "
+                  f"ok={overlapcheck['ok']} "
+                  f"staleness0_bitwise={ovsmoke['ok']}")
     if clustercheck is not None:
         result["cluster_gossip_bytes"] = clustercheck
         if verbose:
@@ -307,11 +423,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
                         sparse_gossip: bool = False,
-                        theta_spread: str = None) -> dict:
+                        theta_spread: str = None,
+                        overlap: bool = False) -> dict:
     """Run one cell in an isolated subprocess (memory isolation) + cache."""
     tag = ".sparse" if sparse_gossip else ""
     if theta_spread:
         tag += ".spread" + theta_spread.replace(",", "_")
+    if overlap:
+        tag += ".overlap"
     out = out_dir / f"{arch}.{shape}.{mesh_kind}{tag}.json"
     if out.exists():
         return json.loads(out.read_text())
@@ -321,6 +440,8 @@ def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
         cmd.append("--sparse-gossip")
     if theta_spread:
         cmd += ["--theta-spread", theta_spread]
+    if overlap:
+        cmd.append("--overlap")
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
     t0 = time.time()
@@ -350,6 +471,12 @@ def main():
                          "PER-CLUSTER dispatch plus an all-max baseline "
                          "and emits the cluster_gossip_bytes byte-win "
                          "verdict")
+    ap.add_argument("--overlap", action="store_true",
+                    help="lower train cells with the overlapped staleness=1 "
+                         "round engine next to the synchronous one and emit "
+                         "the gossip_overlap verdict (permutes off the "
+                         "local-step critical path) plus a staleness=0 "
+                         "bit-for-bit equivalence smoke")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -363,7 +490,8 @@ def main():
                     res = run_cell_subprocess(
                         arch, s.name, mesh_kind, RESULTS_DIR,
                         sparse_gossip=args.sparse_gossip,
-                        theta_spread=args.theta_spread)
+                        theta_spread=args.theta_spread,
+                        overlap=args.overlap)
                     tag = res["status"]
                     ok += tag == "ok"
                     err += tag == "error"
@@ -375,14 +503,17 @@ def main():
 
     res = lower_cell(args.arch, args.shape, args.mesh == "multi",
                      sparse_gossip=args.sparse_gossip,
-                     theta_spread=args.theta_spread)
+                     theta_spread=args.theta_spread,
+                     overlap=args.overlap)
     if args.out:
         Path(args.out).write_text(json.dumps(res, indent=1))
     # gate CI on the HLO verdicts: a lowered-but-wrong wire path must fail
     # the cell, not just print a warning.
     bad = [k for k in ("no_full_leaf_allgather",
                        "gossip_bytes_scale_with_theta",
-                       "cluster_gossip_bytes")
+                       "cluster_gossip_bytes",
+                       "gossip_overlap",
+                       "overlap_equivalence")
            if isinstance(res.get(k), dict) and not res[k]["ok"]]
     if bad:
         print(f"VERDICT FAILED: {bad}")

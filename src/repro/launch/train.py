@@ -24,11 +24,13 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, smoke_model
 from repro.core.compression import cluster_levels_from_theta, quantize_theta
 from repro.core.controller import BudgetState
-from repro.core.round import init_state, make_round_step
+from repro.core.round import (init_overlap_state, init_state,
+                              make_overlap_round_step, make_round_step)
 from repro.data.synthetic import synthetic_tokens
 from repro.dist.policies import make_train_policy
 from repro.fl.baselines import make_controller
-from repro.fl.cost_model import round_energy, round_time
+from repro.fl.cost_model import (decide_stale_clusters, overlap_round_time,
+                                 round_energy, round_time)
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.runtime.checkpoint import save_pytree
@@ -51,6 +53,17 @@ def main():
                     help="route gossip through the theta-scaled wire path")
     ap.add_argument("--wire-dtype", default=None,
                     choices=["f32", "bf16", "int8"])
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped round engine (DESIGN.md §Overlap): "
+                         "hide gossip behind local compute with "
+                         "bounded-staleness mixing")
+    ap.add_argument("--staleness", type=int, default=1, choices=[0, 1],
+                    help="staleness bound for --overlap: 0 reproduces the "
+                         "synchronous engine bit-for-bit, 1 lets behind "
+                         "clusters ship their stale-by-1 model")
+    ap.add_argument("--stale-quantile", type=float, default=0.9,
+                    help="straggler-deadline quantile deciding which "
+                         "clusters run stale on gossip rounds")
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault injection: device dropout, deadline "
                          "misses, cluster partitions, coordinator churn")
@@ -63,11 +76,13 @@ def main():
     bundle = get_config(args.arch)
     cfg = smoke_model(bundle.model) if args.smoke else bundle.model
     hcef = bundle.hcef
-    if args.sparse_gossip or args.wire_dtype:
+    if args.sparse_gossip or args.wire_dtype or args.overlap:
         import dataclasses
         hcef = dataclasses.replace(
             hcef, sparse_gossip=hcef.sparse_gossip or args.sparse_gossip,
-            wire_dtype=args.wire_dtype or hcef.wire_dtype)
+            wire_dtype=args.wire_dtype or hcef.wire_dtype,
+            overlap=args.overlap,
+            staleness=args.staleness if args.overlap else 0)
 
     if args.mesh == "host":
         mesh, policy = None, None
@@ -79,30 +94,45 @@ def main():
         policy = make_train_policy(mesh, topo, dp_axes=dp_axes(mesh))
 
     R = topo.num_devices
-    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    cluster_of = np.repeat(np.arange(topo.clusters),
+                           topo.devices_per_cluster)
+    state = (init_overlap_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+             if hcef.overlap
+             else init_state(cfg, hcef, topo, jax.random.PRNGKey(0)))
     # Per-assignment jit cache (DESIGN.md §Static-k): gossip steps are
     # keyed by the static per-cluster level assignment so each distinct
     # (cluster -> level) vector lowers ONE program with sender-sized
     # payloads.  LRU-bounded: a drifting heterogeneity model could
     # otherwise visit up to |levels|^C assignments and pin every compiled
     # executable in host memory (evicting recompiles — the price of a
-    # genuinely new assignment, not of revisiting a recent one).
+    # genuinely new assignment, not of revisiting a recent one).  The
+    # overlapped engine adds the static stale-cluster set to the key
+    # (DESIGN.md §Overlap) — one program per (levels, stale) assignment.
     step_cache: OrderedDict = OrderedDict()
     STEP_CACHE_MAX = 32
 
-    def get_step(gossip_round: bool, cluster_levels=None):
-        key = (gossip_round, cluster_levels)
+    def get_step(gossip_round: bool, cluster_levels=None,
+                 stale_clusters=None):
+        key = (gossip_round, cluster_levels, stale_clusters)
         if key not in step_cache:
-            step_cache[key] = jax.jit(make_round_step(
-                cfg, hcef, topo, policy, gossip=gossip_round,
-                cluster_levels=cluster_levels))
+            if hcef.overlap:
+                step = make_overlap_round_step(
+                    cfg, hcef, topo, policy, gossip=gossip_round,
+                    cluster_levels=cluster_levels,
+                    stale_clusters=stale_clusters)
+            else:
+                step = make_round_step(
+                    cfg, hcef, topo, policy, gossip=gossip_round,
+                    cluster_levels=cluster_levels)
+            step_cache[key] = jax.jit(step)
             if len(step_cache) > STEP_CACHE_MAX:
                 step_cache.popitem(last=False)
         step_cache.move_to_end(key)
         return step_cache[key]
 
     controller = make_controller(args.controller, hcef.tau)
-    n_params = sum(int(x.size) for x in jax.tree.leaves(state.params)) // R
+    fl0 = state.fl if hcef.overlap else state
+    n_params = sum(int(x.size) for x in jax.tree.leaves(fl0.params)) // R
     het = HeterogeneityModel(num_devices=R, model_bits=n_params * 16)
     budget = BudgetState(
         time_budget=hcef.time_budget or np.inf,
@@ -147,9 +177,7 @@ def main():
                 theta = quantize_theta(theta, hcef.theta_levels)
                 if gossip_round and policy is not None:
                     cluster_levels = cluster_levels_from_theta(
-                        theta, hcef.theta_levels,
-                        np.repeat(np.arange(topo.clusters),
-                                  topo.devices_per_cluster))
+                        theta, hcef.theta_levels, cluster_of)
             idx = rng.integers(0, corpus.shape[1], (R, b_per_dev))
             batch = {"tokens": jnp.asarray(np.concatenate(
                 [corpus[d, idx[d]] for d in range(R)]))}
@@ -158,6 +186,15 @@ def main():
             wire_kw = (dict(wire_dtype=hcef.wire_dtype,
                             wire_block=hcef.wire_block, dense_bits=16)
                        if hcef.sparse_gossip else {})
+            stale_cl = None
+            if hcef.overlap and hcef.staleness and gossip_round:
+                # who runs stale this round: clusters whose backhaul gossip
+                # does not fit in the straggler-deadline compute window.
+                stale_cl = decide_stale_clusters(
+                    rho, theta, reports.mu, reports.nu, hcef.tau,
+                    cluster_of, backhaul=het.backhaul_time(),
+                    alive=alive0 if plan is not None else None,
+                    quantile=args.stale_quantile, **wire_kw)
             faults = None
             alive = conn = None
             if plan is not None:
@@ -169,7 +206,7 @@ def main():
                         **wire_kw),
                     alive=alive0)
                 alive, conn = faults.alive, faults.cluster_conn
-            fn = get_step(gossip_round, cluster_levels)
+            fn = get_step(gossip_round, cluster_levels, stale_cl)
             degraded = faults is not None and (not alive.all()
                                                or not conn.all())
             if degraded:
@@ -187,12 +224,20 @@ def main():
                 # contract: chaos at zero faults == no chaos).
                 state, m = fn(state, batch, jnp.asarray(rho, jnp.float32),
                               jnp.asarray(theta, jnp.float32), keys)
-            t, _ = round_time(rho, theta, reports.mu, reports.nu, hcef.tau,
-                              np.repeat(np.arange(topo.clusters),
-                                        topo.devices_per_cluster),
-                              gossip=gossip_round,
-                              backhaul=het.backhaul_time(),
-                              alive=alive, conn=conn, **wire_kw)
+            if stale_cl:
+                # overlapped accounting: a stale cluster's gossip transfer
+                # hides behind its tau local steps — max, not sum.
+                t, _ = overlap_round_time(
+                    rho, theta, reports.mu, reports.nu, hcef.tau,
+                    cluster_of, gossip=gossip_round,
+                    backhaul=het.backhaul_time(), alive=alive, conn=conn,
+                    stale_clusters=stale_cl, **wire_kw)
+            else:
+                t, _ = round_time(rho, theta, reports.mu, reports.nu,
+                                  hcef.tau, cluster_of,
+                                  gossip=gossip_round,
+                                  backhaul=het.backhaul_time(),
+                                  alive=alive, conn=conn, **wire_kw)
             e = round_energy(rho, theta, reports.mu, reports.nu,
                              reports.alpha, reports.p, hcef.tau,
                              alive=alive, **wire_kw)
@@ -206,6 +251,8 @@ def main():
                 budget.r = 0
                 budget.l += 1
             chaos_str = ""
+            if stale_cl is not None:
+                chaos_str += f" stale={len(stale_cl)}/{topo.clusters}"
             if faults is not None:
                 chaos_str = (f" part={faults.participation:.2f} "
                              f"coord={faults.coordinator}"
@@ -216,8 +263,9 @@ def main():
                   f"sim_t={budget.time_spent_prev + budget.time_spent_this:9.0f}s "
                   f"wall={time.time()-t0:5.1f}s" + chaos_str)
             if args.ckpt_dir:
+                fl = state.fl if hcef.overlap else state
                 save_pytree(Path(args.ckpt_dir) / f"ckpt_{rnd:06d}.npz",
-                            state._asdict(), meta={"round": rnd})
+                            fl._asdict(), meta={"round": rnd})
 
 
 class _null:

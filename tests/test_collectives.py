@@ -350,14 +350,13 @@ def test_per_cluster_hetero_matches_reference(C, Dev, levels, rng):
     np.testing.assert_allclose(np.asarray(f(x)), want, atol=1e-5)
 
 
-def test_per_cluster_layout_b_escalates_to_shard_level(rng):
-    """Layout B's sender granularity is the SHARD: clusters sharing a
-    payload escalate to the shard's max level (documented contract)."""
+def test_per_cluster_layout_b_per_row_no_escalation(rng):
+    """Layout B's sender granularity is the individual CLUSTER: a shard
+    mixing levels ships each row at its OWN level via per-row subset
+    plans (DESIGN.md §Static-k) — the mesh result must match the off-mesh
+    reference at the ORIGINAL misaligned levels, not the shard max."""
     C, Dev = 16, 1
     levels = tuple([0.1, 1.0] * 8)  # misaligned: each shard mixes levels
-    Cl = 2
-    esc = tuple(max(levels[j * Cl:(j + 1) * Cl])
-                for j in range(8) for _ in range(Cl))
     x = jnp.asarray(rng.normal(size=(C, 96)), jnp.float32)
     f = jax.jit(shard_map(
         lambda xl: sparse_neighbor_exchange(
@@ -366,8 +365,17 @@ def test_per_cluster_layout_b_escalates_to_shard_level(rng):
         mesh=_mesh(), in_specs=P("data", None), out_specs=P("data", None),
         check_vma=False))
     want = np.asarray(sparse_neighbor_exchange(
-        x, clusters=C, dev=Dev, axes=(), cluster_theta=esc, hkind="ring"))
+        x, clusters=C, dev=Dev, axes=(), cluster_theta=levels,
+        hkind="ring"))
     np.testing.assert_allclose(np.asarray(f(x)), want, atol=1e-5)
+    # the shard-max ESCALATED operator is a different matrix here: the
+    # per-row path must NOT reproduce it (0.1-level rows stay top-k)
+    Cl = 2
+    esc = tuple(max(levels[j * Cl:(j + 1) * Cl])
+                for j in range(8) for _ in range(Cl))
+    escalated = np.asarray(sparse_neighbor_exchange(
+        x, clusters=C, dev=Dev, axes=(), cluster_theta=esc, hkind="ring"))
+    assert np.abs(np.asarray(f(x)) - escalated).max() > 1e-4
 
 
 def test_per_cluster_low_level_contracts_towards_dense(rng):

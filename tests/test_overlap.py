@@ -1,0 +1,250 @@
+"""Overlapped round engine (DESIGN.md §Overlap contract).
+
+Two load-bearing guarantees:
+
+ * staleness=0 is NOT "approximately" the synchronous engine — the
+   overlapped step must reproduce it BIT-FOR-BIT (params, EF, pending)
+   across every gossip layout (A, B, multi-axis replica dims, off-mesh),
+   because the production launcher flips between the engines based on a
+   runtime decision and any drift would make that flip a silent
+   hyperparameter.
+ * staleness=1 with a zero learning rate is a fixed point: nobody moved,
+   so mixing stale-by-1 models (== the unchanged start-of-round models)
+   must return the same models, and the stale program must agree with the
+   synchronous gossip program (pending == post-intra means when delta=0).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.round import (FLState, OverlapState, init_overlap_state,
+                              init_state, make_overlap_round_step,
+                              make_round_step)
+from repro.dist.compat import make_mesh
+from repro.dist.policies import make_train_policy
+from repro.fl.cost_model import (decide_stale_clusters, overlap_round_time,
+                                 round_time)
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 (fake) devices")
+
+# (name, topo, mesh shape, mesh axes, dp axes, per-cluster levels)
+LAYOUTS = {
+    # one device row per shard, a cluster spans 2 shards
+    "layout_a": (FLTopology(clusters=2, devices_per_cluster=2),
+                 (4, 2), ("data", "model"), ("data",), (0.1, 1.0)),
+    # 2 clusters per shard (per-ROW wire plans)
+    "layout_b": (FLTopology(clusters=4, devices_per_cluster=1),
+                 (2, 4), ("data", "model"), ("data",),
+                 (0.1, 1.0, 0.4, 1.0)),
+    # multi-axis replica dims (fl_multi-style; levels collapse to max)
+    "fl_multi": (FLTopology(clusters=2, devices_per_cluster=2),
+                 (2, 2, 2), ("pod", "data", "model"), ("pod", "data"),
+                 (0.1, 1.0)),
+}
+
+
+def _setup(layout, eta=0.1, momentum=0.0, **hcef_kw):
+    topo, mshape, maxes, dpx, levels = LAYOUTS[layout]
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    hcef = HCEFConfig(tau=2, q=2, eta=eta, momentum=momentum,
+                      sparse_gossip=True, **hcef_kw)
+    R = topo.num_devices
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    mesh = make_mesh(mshape, maxes)
+    policy = make_train_policy(mesh, topo, dp_axes=dpx)
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    put = lambda t: jax.tree.map(
+        lambda x, s: jax.device_put(x, s), t,
+        policy.param_shardings(t, stacked=True))
+    state = FLState(params=put(state.params), momentum=None,
+                    ef=put(state.ef), round_idx=state.round_idx)
+    return cfg, topo, hcef, mesh, policy, state, batch, keys, levels
+
+
+def _leaves_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_staleness0_bitwise_equals_sync(layout):
+    cfg, topo, hcef, mesh, policy, state, batch, keys, levels = \
+        _setup(layout)
+    hcef_ov = dataclasses.replace(hcef, overlap=True, staleness=0)
+    R = topo.num_devices
+    rho, theta = jnp.ones(R), jnp.full(R, 0.25)
+    step_sync = jax.jit(make_round_step(cfg, hcef, topo, policy,
+                                        gossip=True,
+                                        cluster_levels=levels))
+    step_ov = jax.jit(make_overlap_round_step(cfg, hcef_ov, topo, policy,
+                                              gossip=True,
+                                              cluster_levels=levels))
+    with mesh:
+        s_ref, m_ref = step_sync(state, batch, rho, theta, keys)
+        o, m_ov = step_ov(OverlapState(fl=state, pending=state.params),
+                          batch, rho, theta, keys)
+    assert _leaves_equal(s_ref.params, o.fl.params)
+    assert _leaves_equal(s_ref.ef, o.fl.ef)
+    # pending buffer refreshed to the new model every round
+    assert _leaves_equal(o.fl.params, o.pending)
+    assert float(m_ref["loss"].mean()) == float(m_ov["loss"].mean())
+
+
+@pytest.mark.parametrize("layout", ["layout_a", "layout_b"])
+def test_staleness1_eta0_matches_sync(layout):
+    """eta=0 => delta=0 => the start-of-round pending buffer EQUALS the
+    post-intra means, so the all-stale staleness=1 mix must agree with
+    the synchronous gossip mix (same values through the same wire)."""
+    cfg, topo, hcef, mesh, policy, state, batch, keys, levels = \
+        _setup(layout, eta=0.0)
+    hcef_ov = dataclasses.replace(hcef, overlap=True, staleness=1)
+    R = topo.num_devices
+    rho, theta = jnp.ones(R), jnp.full(R, 0.25)
+    step_sync = jax.jit(make_round_step(cfg, hcef, topo, policy,
+                                        gossip=True,
+                                        cluster_levels=levels))
+    step_ov = jax.jit(make_overlap_round_step(cfg, hcef_ov, topo, policy,
+                                              gossip=True,
+                                              cluster_levels=levels))
+    with mesh:
+        s_ref, _ = step_sync(state, batch, rho, theta, keys)
+        o, m = step_ov(OverlapState(fl=state, pending=state.params),
+                       batch, rho, theta, keys)
+    assert float(m["stale_frac"]) == 1.0
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(o.fl.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_staleness1_uniform_models_fixed_point():
+    """eta=0 + uniform models + theta=1 wire (identity compression):
+    mixing stale-by-1 models that nobody moved must return them
+    unchanged (H rows sum to 1).  Only holds at level 1.0 — a theta<1
+    wire top-k-compresses the NEIGHBOR model terms themselves."""
+    cfg, topo, hcef, mesh, policy, state, batch, keys, _ = \
+        _setup("layout_a", eta=0.0)
+    hcef_ov = dataclasses.replace(hcef, overlap=True, staleness=1)
+    R = topo.num_devices
+    # uniform models: broadcast replica 0 so the mix has a fixed point
+    state = state._replace(params=jax.tree.map(
+        lambda x: jnp.tile(x[:1], (R,) + (1,) * (x.ndim - 1)),
+        state.params))
+    rho, theta = jnp.ones(R), jnp.ones(R)
+    step_ov = jax.jit(make_overlap_round_step(
+        cfg, hcef_ov, topo, policy, gossip=True,
+        cluster_levels=(1.0,) * topo.clusters))
+    with mesh:
+        o, m = step_ov(OverlapState(fl=state, pending=state.params),
+                       batch, rho, theta, keys)
+    assert float(m["stale_frac"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(o.fl.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_staleness1_offmesh_fixed_point():
+    """Off-mesh (policy=None) staleness=1: same eta=0 fixed point."""
+    cfg = smoke_model(get_config("smollm_135m").model)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.0, momentum=0.0, overlap=True,
+                      staleness=1)
+    R = topo.num_devices
+    state = init_overlap_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    uni = jax.tree.map(
+        lambda x: jnp.tile(x[:1], (R,) + (1,) * (x.ndim - 1)),
+        state.fl.params)
+    state = OverlapState(fl=state.fl._replace(params=uni), pending=uni)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    step = jax.jit(make_overlap_round_step(cfg, hcef, topo, gossip=True))
+    o, m = step(state, batch, jnp.ones(R), jnp.full(R, 0.25), keys)
+    assert float(m["stale_frac"]) == 1.0
+    for a, b in zip(jax.tree.leaves(state.fl.params),
+                    jax.tree.leaves(o.fl.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_empty_stale_set_degrades_to_sync():
+    """stale_clusters=() (nobody behind) must BE the synchronous program."""
+    cfg, topo, hcef, mesh, policy, state, batch, keys, levels = \
+        _setup("layout_a")
+    hcef_ov = dataclasses.replace(hcef, overlap=True, staleness=1)
+    R = topo.num_devices
+    rho, theta = jnp.ones(R), jnp.full(R, 0.25)
+    step_sync = jax.jit(make_round_step(cfg, hcef, topo, policy,
+                                        gossip=True,
+                                        cluster_levels=levels))
+    step_ov = jax.jit(make_overlap_round_step(cfg, hcef_ov, topo, policy,
+                                              gossip=True,
+                                              cluster_levels=levels,
+                                              stale_clusters=()))
+    with mesh:
+        s_ref, _ = step_sync(state, batch, rho, theta, keys)
+        o, _ = step_ov(OverlapState(fl=state, pending=state.params),
+                       batch, rho, theta, keys)
+    assert _leaves_equal(s_ref.params, o.fl.params)
+
+
+def test_overlap_requires_flag():
+    cfg = smoke_model(get_config("smollm_135m").model)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=1, q=1, eta=0.1, momentum=0.0)
+    with pytest.raises(ValueError, match="overlap"):
+        make_overlap_round_step(cfg, hcef, topo)
+    with pytest.raises(ValueError):
+        HCEFConfig(tau=1, q=1, eta=0.1, momentum=0.0, staleness=1)
+
+
+def test_overlap_round_time_hides_gossip():
+    """Stale clusters cost max(compute, wire) + fold; fresh keep the sum."""
+    rho = np.ones(4)
+    theta = np.ones(4)
+    mu = np.array([1.0, 1.0, 3.0, 3.0])
+    nu = np.zeros(4)
+    cluster_of = np.array([0, 0, 1, 1])
+    t_sync, pc_sync = round_time(rho, theta, mu, nu, 2, cluster_of,
+                                 gossip=True, backhaul=5.0)
+    t_ov, pc_ov = overlap_round_time(rho, theta, mu, nu, 2, cluster_of,
+                                     gossip=True, backhaul=5.0,
+                                     stale_clusters=(0, 1), fold=0.5)
+    # sync: slow cluster 3*2 + 5 = 11; overlap: max(6, 5) + 0.5 = 6.5
+    assert t_sync == pytest.approx(11.0)
+    assert t_ov == pytest.approx(6.5)
+    np.testing.assert_allclose(pc_ov, [5.5, 6.5])
+    # partial stale: cluster 1 fresh keeps the serial sum
+    t_p, pc_p = overlap_round_time(rho, theta, mu, nu, 2, cluster_of,
+                                   gossip=True, backhaul=5.0,
+                                   stale_clusters=(0,), fold=0.5)
+    np.testing.assert_allclose(pc_p, [5.5, 11.0])
+    # non-gossip rounds: identical to the synchronous model
+    t_n, _ = overlap_round_time(rho, theta, mu, nu, 2, cluster_of,
+                                gossip=False, backhaul=5.0)
+    t_n2, _ = round_time(rho, theta, mu, nu, 2, cluster_of, gossip=False)
+    assert t_n == t_n2
+
+
+def test_decide_stale_clusters_picks_slow_backhaul():
+    rho = np.ones(4)
+    theta = np.ones(4)
+    mu = np.array([1.0, 1.0, 1.0, 1.0])
+    nu = np.zeros(4)
+    cluster_of = np.array([0, 0, 1, 1])
+    # no backhaul -> everything fits the deadline -> nobody stale
+    assert decide_stale_clusters(rho, theta, mu, nu, 2, cluster_of,
+                                 backhaul=0.0) == ()
+    # a backhaul larger than the compute slack -> every cluster stale
+    assert decide_stale_clusters(rho, theta, mu, nu, 2, cluster_of,
+                                 backhaul=100.0) == (0, 1)
