@@ -148,6 +148,21 @@ def round_step_bench(iters=5):
     rows = []
     hcef_sp = dataclasses.replace(hcef, sparse_gossip=True,
                                   theta_levels=levels)
+    # wire_bytes derived column: exact per-sender encoded bytes one gossip
+    # round ships for each param leaf at the given per-cluster levels
+    # (core.wire_format tables, capped at the dense row — the dense-wire
+    # fallback's contract), so the CSV ties wall-clock to wire traffic.
+    from repro.core import wire_format as wf
+    leaf_dims = [int(np.prod(l.shape[1:]))
+                 for l in jax.tree.leaves(state.params)]
+    d_item = jnp.dtype(cfg.param_dtype).itemsize
+
+    def wire_col(cluster_levels, hc):
+        tot = sum(min(wf.row_bytes(float(t), L, wire_dtype=hc.wire_dtype,
+                                   wire_block=hc.wire_block), L * d_item)
+                  for t in cluster_levels for L in leaf_dims)
+        return f"wire{tot / 1024:.0f}KB"
+
     variants = [("dense", hcef), ("sparse", hcef_sp)]
     with mesh:
         for name, hc in variants:
@@ -157,18 +172,21 @@ def round_step_bench(iters=5):
                 theta = jnp.full(R, th)
                 us = _bench(lambda s: step(s, batch, rho, theta, keys),
                             state_sh, iters=iters)
-                rows.append((f"round_{name}_gossip_th{th}", us,
-                             f"R{R}_smoke_8dev"))
+                col = (f"R{R}_smoke_8dev" if name == "dense" else
+                       f"R{R}_smoke_8dev_"
+                       + wire_col((th,) * topo.clusters, hc))
+                rows.append((f"round_{name}_gossip_th{th}", us, col))
         # per-cluster static dispatch (sender-sized payloads, no switch):
         # one cluster at the min level, one at the max
+        lv_pc = (levels[0], levels[-1])
         step_pc = jax.jit(make_round_step(
             cfg, hcef_sp, topo, policy=policy, gossip=True,
-            cluster_levels=(levels[0], levels[-1])))
+            cluster_levels=lv_pc))
         theta = jnp.full(R, levels[0])
         us = _bench(lambda s: step_pc(s, batch, rho, theta, keys),
                     state_sh, iters=iters)
         rows.append((f"round_sparse_pc_gossip_th{levels[0]}-{levels[-1]}",
-                     us, f"R{R}_smoke_8dev"))
+                     us, f"R{R}_smoke_8dev_{wire_col(lv_pc, hcef_sp)}"))
         # overlapped engine (DESIGN.md §Overlap): the staleness=1
         # all-stale program against the synchronous per-cluster program
         # it replaces.  On the fake-device CPU mesh collectives cost ~0
@@ -188,7 +206,8 @@ def round_step_bench(iters=5):
         us_ov = _bench(lambda s: step_ov(s, batch, rho, theta, keys),
                        ov_state, iters=iters)
         rows.append(("round_overlap_stale1_gossip", us_ov,
-                     f"sync={us:.0f}us_R{R}_smoke_8dev"))
+                     f"sync={us:.0f}us_R{R}_smoke_8dev_"
+                     + wire_col(lv, hcef_ov)))
 
     # modeled overlapped round time on the smollm heterogeneity cell:
     # a stale cluster costs max(compute, gossip) instead of the sum.
@@ -246,8 +265,22 @@ def main():
     th = jnp.full((8,), 0.1, jnp.float32)
     f = jax.jit(lambda x, t: ops.topk_compress(x, t, block=1024, impl="jnp"))
     us = _bench(f, xc, th)
+    # Two rates, two meanings: input GB/s is the HBM traffic the compress
+    # kernel reads (the number that rooflines against memory bandwidth);
+    # wire MB/s is the rate at which the kernel PRODUCES gossip payload
+    # bytes if its survivors ship at this theta (core.wire_format exact
+    # byte tables) — reporting input bytes alone overstated what the wire
+    # sees by 1/theta or more.
+    from repro.core import wire_format as wf
+    L = xc.shape[1]
     gbps = xc.size * 4 / (us / 1e6) / 1e9
-    rows.append(("topk_compress_8x1M", us, f"{gbps:.2f}GB/s"))
+    wire = {wd: xc.shape[0] * min(wf.row_bytes(0.1, L, wire_dtype=wd),
+                                  L * 4) / (us / 1e6) / 1e6
+            for wd in ("f32", "int4")}
+    rows.append(("topk_compress_8x1M", us,
+                 f"{gbps:.2f}GB/s_in"
+                 f"|wire_f32={wire['f32']:.0f}MB/s"
+                 f"|wire_int4={wire['int4']:.0f}MB/s"))
 
     la = -jnp.asarray(rng.uniform(0.01, 1, size=(2, 2048, 256)), jnp.float32)
     gx = jnp.asarray(rng.normal(size=(2, 2048, 256)), jnp.float32)

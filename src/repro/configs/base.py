@@ -158,9 +158,20 @@ class HCEFConfig:
     # dispatches at runtime, so gossip wire bytes scale with theta.
     sparse_gossip: bool = False
     theta_levels: Tuple[float, ...] = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
-    wire_dtype: str = "f32"  # f32 | bf16 | int8 (dist/collectives.Wire)
+    # f32 | bf16 | int8 | int4 | fp8 (dist/collectives.Wire; the v2
+    # formats int4/fp8 ship packed ascending offsets, DESIGN.md §Wire
+    # format v2)
+    wire_dtype: str = "f32"
     wire_block: int = 1024  # wire-encode slab length (block-local offsets)
     error_feedback: bool = True
+    # CHOCO-style wire-side error feedback: gossip payloads carry the
+    # difference to a shared neighbor estimate, so wire quantization
+    # error scales with the compressed DIFFERENCE rather than ||params||.
+    # Requires sparse_gossip; incompatible with overlap staleness and
+    # with chaos cluster partitions (the estimates would desync — the
+    # round step raises).
+    wire_ef: bool = False
+    wire_ef_gamma: float = 1.0  # consensus step size (1.0 = plain mix)
     # --- overlapped round engine (DESIGN.md §Overlap contract) ---
     # overlap=True double-buffers the edge models so gossip ppermutes on the
     # PENDING buffer run concurrently with the next round's local steps.
@@ -171,7 +182,7 @@ class HCEFConfig:
     staleness: int = 0
 
     def __post_init__(self):
-        if self.wire_dtype not in ("f32", "bf16", "int8"):
+        if self.wire_dtype not in ("f32", "bf16", "int8", "int4", "fp8"):
             raise ValueError(f"wire_dtype {self.wire_dtype!r}")
         if self.wire_dtype == "int8" and self.wire_block > 32768:
             raise ValueError(  # int16 block-local offsets wrap past 2^15-1
@@ -184,6 +195,19 @@ class HCEFConfig:
                 f"stale), got {self.staleness}")
         if self.staleness and not self.overlap:
             raise ValueError("staleness > 0 requires overlap=True")
+        if self.wire_ef:
+            if not self.sparse_gossip:
+                raise ValueError("wire_ef requires sparse_gossip=True (the "
+                                 "estimates track wire-encoded payloads)")
+            if self.staleness:
+                raise ValueError(
+                    "wire_ef is incompatible with overlap staleness: a "
+                    "stale payload would update neighbors' estimates with "
+                    "a buffer the sender's own estimate never saw")
+        if self.wire_ef_gamma <= 0.0 or self.wire_ef_gamma > 1.0:
+            raise ValueError(
+                f"wire_ef_gamma must lie in (0, 1], got "
+                f"{self.wire_ef_gamma}")
 
 
 @dataclass(frozen=True)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.wire_format import compression_ratio_bytes  # noqa: F401
 from repro.dist.compat import shard_map
 
 from repro.kernels import ops
@@ -104,24 +105,13 @@ def compress_delta(delta, ef, theta, *, block: int = 1024,
             treedef.unflatten([r for _, r in out]))
 
 
-# Bits per kept entry of the wire formats in dist/collectives.wire_encode:
-# (value_bits, offset_bits, per-wire-block scale_bits).
+# Bits per kept entry of the FIXED-WIDTH v1 wire formats: (value_bits,
+# offset_bits, per-wire-block scale_bits).  Documentation only — the v2
+# formats (int4/fp8) pack offsets to a (wb, k_b)-dependent width, so every
+# byte computation goes through ``core.wire_format`` (the single source of
+# truth shared with dist/collectives and dist/hlo_analysis).
 WIRE_FORMAT_BITS = {"f32": (32, 32, 0), "bf16": (16, 32, 0),
                     "int8": (8, 16, 32)}
-
-
-def compression_ratio_bytes(theta, *, wire_dtype: str = "f32",
-                            wire_block: int = 1024, dense_bits=16):
-    """Wire bytes of the sparse (value, block-local offset) encoding as a
-    fraction of the dense payload — the cost model's effective theta.
-
-    Matches ``dist/collectives.wire_encode`` exactly: theta * wire_block
-    entries of (value_bits + offset_bits) plus one scale per wire block,
-    over wire_block dense entries of dense_bits each.  Accepts scalar or
-    array theta (the controller's per-device vector).
-    """
-    v, o, s = WIRE_FORMAT_BITS[wire_dtype]
-    return (np.asarray(theta) * (v + o) + s / wire_block) / dense_bits
 
 
 def quantize_theta(theta, levels):

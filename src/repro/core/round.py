@@ -32,6 +32,11 @@ class FLState(NamedTuple):
     momentum: Any   # pytree or None
     ef: Any         # error-feedback pytree, leaves (R, *shape)
     round_idx: jnp.ndarray  # scalar int32
+    # CHOCO-style wire-EF estimates (hcef.wire_ef; DESIGN.md §Wire format
+    # v2): {"est_self": pytree, "est_wsum": pytree} of f32 leaves shaped
+    # like params, or None.  Last field so every keyword-based
+    # construction (and old checkpoints) default it.
+    wire_ef: Any = None
 
 
 class OverlapState(NamedTuple):
@@ -70,8 +75,15 @@ def init_state(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
         mom = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.dtype(
             cfg.state_dtype)), params_r)
     ef = jax.tree.map(lambda x: jnp.zeros_like(x), params_r)
+    wef = None
+    if hcef.wire_ef:
+        # zero estimates: round 0's payload is the full mean (q = x - 0),
+        # so the network's estimates converge from the first gossip.
+        z = lambda: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params_r)
+        wef = {"est_self": z(), "est_wsum": z()}
     return FLState(params=params_r, momentum=mom, ef=ef,
-                   round_idx=jnp.zeros((), jnp.int32))
+                   round_idx=jnp.zeros((), jnp.int32), wire_ef=wef)
 
 
 def abstract_state(cfg: ModelConfig, hcef: HCEFConfig,
@@ -153,6 +165,9 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
     R = topo.num_devices
     cluster_levels = _check_cluster_levels(cluster_levels, hcef, C, policy,
                                            gossip)
+    if hcef.wire_ef and gossip and (policy is None or policy.mesh is None):
+        raise ValueError("wire_ef requires a mesh policy: the non-fused "
+                         "aggregation path has no wire to feed back on")
     H_np = mixing.make_mixing(topo.backhaul, C)
     # Paper Appendix A: the whole aggregation (intra-cluster averaging +
     # gossip + broadcast-back) is one linear operator on the device dim,
@@ -218,6 +233,12 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             if alive_w is None:
                 raise ValueError("alive requires alive_w (host-computed "
                                  "participation_weights)")
+            if hcef.wire_ef and conn is not None and gossip:
+                raise ValueError(
+                    "wire_ef is incompatible with chaos cluster "
+                    "partitions (conn): a partitioned sender's neighbors "
+                    "would zero its contribution while its own estimate "
+                    "advances — the shared estimates desync")
             alive_f = jnp.asarray(alive, jnp.float32)
             alive_wf = jnp.asarray(alive_w, jnp.float32)
             conn_f = (jnp.asarray(conn, jnp.float32)
@@ -241,6 +262,7 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                     state.params, state.momentum, batch_r, keys, rho)
 
         # --- compression Q + aggregation (Sec. 3.2 / lines 16, 18) ---
+        new_wef = state.wire_ef  # advanced only by sparse gossip rounds
         mesh = policy.mesh if policy is not None else None
         if mesh is not None:
             # Fused per-leaf shard_map: each chip compresses the blocks of
@@ -269,9 +291,13 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             # are band-rotation ppermutes of the compact wire payload.
             # At theta < 1 the NEIGHBOR terms of the mix are top-k
             # approximations of the gossiped edge models (self term exact),
-            # i.e. a sparsified application of H — wire-side error feedback
-            # (CHOCO-style estimate state) is a ROADMAP item.
+            # i.e. a sparsified application of H.  With hcef.wire_ef the
+            # payload is the difference to a CHOCO-style shared estimate
+            # (FLState.wire_ef), so the truncation error scales with the
+            # consensus gap instead of the mean's norm (DESIGN.md §Wire
+            # format v2).
             sparse = hcef.sparse_gossip and gossip and R > 1
+            use_wef = bool(hcef.wire_ef) and sparse
 
             def per_leaf(x0l, dl, el, spec, mix_hkind):
                 pass_conn = chaos and conn is not None and mix_hkind != "none"
@@ -329,6 +355,10 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
             new_flat = [p for p, _ in outs]
             ef = treedef.unflatten([r for _, r in outs])
 
+            if use_wef:
+                flat_es = treedef.flatten_up_to(state.wire_ef["est_self"])
+                flat_ew = treedef.flatten_up_to(state.wire_ef["est_wsum"])
+
             if sparse and cluster_levels is not None:
                 # Per-CLUSTER static dispatch: one program per distinct
                 # (cluster -> level) assignment (the call site jit-caches
@@ -337,23 +367,40 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
                 # sparse_neighbor_exchange — no switch, no dead branches.
                 gossip_conn = chaos and conn is not None
 
-                def gossip_leaf_pc(ml, spec):
-                    def local_g(ms, *cargs):
+                def gossip_leaf_pc(ml, spec, ef=None):
+                    def local_g(ms, *rest):
+                        wef, cargs = None, rest
+                        if ef is not None:
+                            wef, cargs = (rest[0], rest[1]), rest[2:]
                         return sparse_neighbor_exchange(
                             ms, clusters=C, dev=Dev, axes=rep_axes,
                             cluster_theta=cluster_levels, hkind=hkind,
                             wire_dtype=hcef.wire_dtype,
                             wire_block=hcef.wire_block, intra_done=True,
+                            wire_ef=wef,
+                            wire_ef_gamma=hcef.wire_ef_gamma,
                             conn=cargs[0] if gossip_conn else None)
 
-                    gspecs = (spec,) + ((PS(None),) if gossip_conn else ())
-                    gargs = (ml,) + ((conn_f,) if gossip_conn else ())
+                    nio = 1 if ef is None else 3  # (y[, est_self, est_wsum])
+                    gspecs = (spec,) * nio + ((PS(None),) if gossip_conn
+                                              else ())
+                    gargs = (ml,) + (tuple(ef) if ef else ()) + (
+                        (conn_f,) if gossip_conn else ())
                     return shard_map(local_g, mesh=mesh, in_specs=gspecs,
-                                     out_specs=spec,
+                                     out_specs=(spec,) * nio if ef
+                                     else spec,
                                      check_vma=False)(*gargs)
 
-                new_flat = [gossip_leaf_pc(m, s)
-                            for m, s in zip(new_flat, flat_s)]
+                if use_wef:
+                    outs = [gossip_leaf_pc(m, s, (es, ew))
+                            for m, es, ew, s in zip(new_flat, flat_es,
+                                                    flat_ew, flat_s)]
+                    new_flat = [o[0] for o in outs]
+                    flat_es = [o[1] for o in outs]
+                    flat_ew = [o[2] for o in outs]
+                else:
+                    new_flat = [gossip_leaf_pc(m, s)
+                                for m, s in zip(new_flat, flat_s)]
                 metrics["theta_wire"] = jnp.float32(max(cluster_levels))
             elif sparse:
                 # Fallback for callers that only pass a traced theta: a
@@ -371,29 +418,56 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
 
                 gossip_conn = chaos and conn is not None
 
-                def gossip_leaf(ml, spec, level):
-                    def local_g(ms, *cargs):
+                def gossip_leaf(ml, spec, level, ef=None):
+                    def local_g(ms, *rest):
+                        wef, cargs = None, rest
+                        if ef is not None:
+                            wef, cargs = (rest[0], rest[1]), rest[2:]
                         return sparse_neighbor_exchange(
                             ms, clusters=C, dev=Dev, axes=rep_axes,
                             theta=level, hkind=hkind,
                             wire_dtype=hcef.wire_dtype,
                             wire_block=hcef.wire_block, intra_done=True,
+                            wire_ef=wef,
+                            wire_ef_gamma=hcef.wire_ef_gamma,
                             conn=cargs[0] if gossip_conn else None)
 
-                    gspecs = (spec,) + ((PS(None),) if gossip_conn else ())
-                    gargs = (ml,) + ((conn_f,) if gossip_conn else ())
+                    nio = 1 if ef is None else 3
+                    gspecs = (spec,) * nio + ((PS(None),) if gossip_conn
+                                              else ())
+                    gargs = (ml,) + (tuple(ef) if ef else ()) + (
+                        (conn_f,) if gossip_conn else ())
                     return shard_map(local_g, mesh=mesh, in_specs=gspecs,
-                                     out_specs=spec,
+                                     out_specs=(spec,) * nio if ef
+                                     else spec,
                                      check_vma=False)(*gargs)
 
-                def branch(level):
-                    return lambda ms: [gossip_leaf(m, s, level)
-                                      for m, s in zip(ms, flat_s)]
+                if use_wef:
+                    def branch(level):
+                        def run(op):
+                            ms, ess, ews = op
+                            return [gossip_leaf(m, s, level, (es, ew))
+                                    for m, es, ew, s in zip(ms, ess, ews,
+                                                            flat_s)]
+                        return run
 
-                new_flat = jax.lax.switch(idx, [branch(l) for l in levels],
-                                          new_flat)
+                    outs = jax.lax.switch(idx, [branch(l) for l in levels],
+                                          (new_flat, flat_es, flat_ew))
+                    new_flat = [o[0] for o in outs]
+                    flat_es = [o[1] for o in outs]
+                    flat_ew = [o[2] for o in outs]
+                else:
+                    def branch(level):
+                        return lambda ms: [gossip_leaf(m, s, level)
+                                           for m, s in zip(ms, flat_s)]
+
+                    new_flat = jax.lax.switch(
+                        idx, [branch(l) for l in levels], new_flat)
                 metrics["theta_wire"] = jnp.take(lv, idx)
             new_params = treedef.unflatten(new_flat)
+            if use_wef:
+                new_wef = {"est_self": treedef.unflatten(flat_es),
+                           "est_wsum": treedef.unflatten(flat_ew)}
         else:
             comp, ef = compress_delta(delta, state.ef, theta,
                                       block=hcef.block_size,
@@ -437,7 +511,8 @@ def make_round_step(cfg: ModelConfig, hcef: HCEFConfig, topo: FLTopology,
 
             new_params = jax.tree.map(aggregate, state.params, comp)
         new_state = FLState(params=new_params, momentum=mom, ef=ef,
-                            round_idx=state.round_idx + 1)
+                            round_idx=state.round_idx + 1,
+                            wire_ef=new_wef)
         out_metrics = {k: v for k, v in metrics.items()}
         return new_state, out_metrics
 
@@ -596,7 +671,8 @@ def make_overlap_round_step(cfg: ModelConfig, hcef: HCEFConfig,
                 fl_mid.params, state.pending)
         metrics["stale_frac"] = jnp.float32(len(stale_clusters) / C)
         fl = FLState(params=new_params, momentum=fl_mid.momentum,
-                     ef=fl_mid.ef, round_idx=fl_mid.round_idx)
+                     ef=fl_mid.ef, round_idx=fl_mid.round_idx,
+                     wire_ef=fl_mid.wire_ef)
         return OverlapState(fl=fl, pending=new_params), metrics
 
     return round_step

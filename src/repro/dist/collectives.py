@@ -67,8 +67,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mixing
+from repro.core import wire_format as wf
+from repro.kernels import ops, wire_pack
 
-WIRE_DTYPES = ("f32", "bf16", "int8")
+WIRE_DTYPES = wf.WIRE_DTYPES
 
 
 # ---------------------------------------------------------------------------
@@ -474,11 +476,17 @@ def _mix_dense_local(x, C, Dev, hkind, p_edge, seed, conn=None):
 class Wire(NamedTuple):
     """Compact block-local top-k representation of a batch of rows.
 
-    vals: (m, nb, k_b) kept values in the wire dtype (f32 / bf16 / int8);
-    off:  (m, nb, k_b) block-LOCAL offsets (int32, or int16 for int8 wire);
+    vals: kept values in the wire dtype — (m, nb, k_b) f32 / bf16 / int8,
+      or uint8 for the v2 formats (fp8: e4m3 bitcast, (m, nb, k_b);
+      int4: two's-complement nibbles packed two per byte,
+      (m, nb, ceil(k_b/2)));
+    off:  block-LOCAL offsets — (m, nb, k_b) int32 (f32/bf16) or int16
+      (int8), or (m, nb, nbytes) packed uint8 for the v2 formats (sorted
+      ascending, u8/p4 per ``core.wire_format.offset_mode``);
     scale:(m, nb) f32 per-block dequant scales, or None for f32/bf16.
     The wire-block id is implicit from position — that is what makes the
-    offsets block-local and int16-packable.
+    offsets block-local and packable.  v2 payloads do not carry k_b in
+    their shapes: decode takes it from the static wire plan.
     """
     vals: jnp.ndarray
     off: jnp.ndarray
@@ -486,24 +494,21 @@ class Wire(NamedTuple):
 
 
 def _wire_block_of(L: int, wire_block: int) -> int:
-    return max(1, min(int(wire_block), int(L)))
+    return wf.wire_block_of(L, wire_block)
 
 
 def wire_k(theta: float, L: int, wire_block: int = 1024) -> int:
     """Static per-wire-block k for a compression level theta (k_b)."""
-    wb = _wire_block_of(L, wire_block)
-    return max(1, min(wb, int(np.ceil(float(theta) * wb))))
+    return wf.wire_k(theta, L, wire_block)
 
 
 def wire_bytes_per_row(theta: float, L: int, *, wire_dtype: str = "f32",
                        wire_block: int = 1024) -> int:
-    """Exact bytes one encoded row occupies on the wire (cost model)."""
-    wb = _wire_block_of(L, wire_block)
-    nb = -(-L // wb)
-    k_b = wire_k(theta, L, wire_block)
-    val_b, off_b, scale_b = {"f32": (4, 4, 0), "bf16": (2, 4, 0),
-                             "int8": (1, 2, 4)}[wire_dtype]
-    return nb * (k_b * (val_b + off_b) + scale_b)
+    """Exact bytes one encoded row occupies on the wire (cost model).
+    Delegates to ``core.wire_format`` — the shared byte tables the cost
+    model and the HLO expected-bytes verdicts also read."""
+    return wf.row_bytes(theta, L, wire_dtype=wire_dtype,
+                        wire_block=wire_block)
 
 
 def wire_ships_dense(theta: float, L: int, *, wire_dtype: str = "f32",
@@ -523,11 +528,8 @@ def _wire_plan_key_from_kb(k_b: int, L: int, wire_block: int,
                            wire_dtype: str, dense_itemsize: int):
     """Static encode descriptor for a per-block budget k_b: ("dense",)
     when the encoding would reach the dense row, else ("wire", k_b)."""
-    wb = _wire_block_of(L, wire_block)
-    nb = -(-L // wb)
-    val_b, off_b, scale_b = {"f32": (4, 4, 0), "bf16": (2, 4, 0),
-                             "int8": (1, 2, 4)}[wire_dtype]
-    if nb * (k_b * (val_b + off_b) + scale_b) >= L * int(dense_itemsize):
+    if wf.encoding_reaches_dense(k_b, L, wire_block, wire_dtype,
+                                 dense_itemsize):
         return ("dense",)
     return ("wire", k_b)
 
@@ -617,6 +619,14 @@ def wire_encode(rows, k_b: int, *, wire_block: int = 1024,
     nb = (L + pad) // wb
     xb = rows.reshape(m, nb, wb)
     k_b = max(1, min(int(k_b), wb))
+    if wire_dtype in ("int4", "fp8"):
+        # v2: fused bisect+compact+quantize encode, packed ascending
+        # offsets (kernels/wire_pack.py; jnp reference off-TPU).
+        vals, off, scale = ops.encode_blocks(xb.astype(jnp.float32), k_b,
+                                             wire_dtype=wire_dtype)
+        packed = ops.pack_offsets(off, wb=wb,
+                                  mode=wf.offset_mode(wb, k_b, wire_dtype))
+        return Wire(vals, packed, scale.astype(jnp.float32))
     _, off = jax.lax.top_k(jnp.abs(xb), k_b)
     vals = jnp.take_along_axis(xb, off, axis=-1)
     if wire_dtype == "f32":
@@ -629,14 +639,31 @@ def wire_encode(rows, k_b: int, *, wire_block: int = 1024,
                 scale.astype(jnp.float32))
 
 
-def wire_decode(wire: Wire, L: int, *, wire_block: int = 1024):
-    """Wire -> dense (m, L) f32.  Exact inverse of encode for f32 wires."""
+def wire_decode(wire: Wire, L: int, *, wire_block: int = 1024,
+                wire_dtype: Optional[str] = None,
+                k_b: Optional[int] = None):
+    """Wire -> dense (m, L) f32.  Exact inverse of encode for f32 wires.
+
+    The v1 formats are self-describing (k_b is the trailing vals dim and
+    the dtype follows from the array dtypes), so ``wire_dtype``/``k_b``
+    may be omitted.  The v2 packed formats (int4/fp8) ship neither in
+    their shapes — both come from the static wire plan.
+    """
     vals, off, scale = wire
-    m, nb, k_b = vals.shape
     wb = _wire_block_of(L, wire_block)
-    v = vals.astype(jnp.float32)
-    if scale is not None:
-        v = v * (scale / 127.0)[..., None]
+    m, nb = vals.shape[:2]
+    if wire_dtype in ("int4", "fp8"):
+        if k_b is None:
+            raise ValueError(f"{wire_dtype} wire_decode needs k_b= (packed "
+                             "payloads do not carry it in their shapes)")
+        off = ops.unpack_offsets(off, wb=wb, k_b=k_b,
+                                 mode=wf.offset_mode(wb, k_b, wire_dtype))
+        v = wire_pack.dequantize_vals_jnp(vals, scale, k_b,
+                                          wire_dtype=wire_dtype)
+    else:
+        v = vals.astype(jnp.float32)
+        if scale is not None:
+            v = v * (scale / 127.0)[..., None]
     dense = jnp.zeros((m, nb, wb), jnp.float32)
     dense = dense.at[jnp.arange(m)[:, None, None],
                      jnp.arange(nb)[None, :, None],
@@ -663,6 +690,52 @@ def _roll_rows(C):
             lambda v: jnp.where(keep.reshape((C,) + (1,) * (v.ndim - 1)),
                                 v, jnp.zeros_like(v)), rolled)
     return rot
+
+
+def _member_rows(m: int):
+    """Plan-membership mask for layouts whose plan ``src`` sets index the
+    local rows directly (off-mesh and the psum fallback hold all C
+    cluster rows): row r sends under a plan iff r is in its sender set.
+    Used by the wire-EF local self-decode (``_sparse_mix_rows``)."""
+    def member(src, rows):
+        assert rows is None  # these layouts build full-row plans
+        if src is None:
+            return None
+        return jnp.asarray(np.isin(np.arange(m), sorted(src)), jnp.float32)
+    return member
+
+
+def _member_shard(axes):
+    """Layout-A plan membership: one row per shard, plan ``src`` sets hold
+    SHARD indices — membership is traced on the flat shard index."""
+    def member(src, rows):
+        assert rows is None  # layout A ships one row per shard
+        if src is None:
+            return None
+        hit = jnp.any(jnp.asarray(sorted(src))
+                      == _flat_shard_index(axes))
+        return hit.astype(jnp.float32)[None]  # (m,) with m == 1
+    return member
+
+
+def _member_rows_b(axes, Cl: int):
+    """Layout-B plan membership: static local-row subset mask (``rows``)
+    AND traced shard membership (``src`` holds shard indices).  Each
+    (shard, row) slot belongs to exactly one ``_wire_plans_b`` plan, so
+    summing masked decodes over plans recovers each row's own payload."""
+    def member(src, rows):
+        msk = None
+        if rows is not None:
+            msk = jnp.asarray(np.isin(np.arange(Cl),
+                                      np.asarray(rows, np.int64)),
+                              jnp.float32)
+        if src is not None:
+            hit = jnp.any(jnp.asarray(sorted(src))
+                          == _flat_shard_index(axes)).astype(jnp.float32)
+            msk = hit * (msk if msk is not None
+                         else jnp.ones((Cl,), jnp.float32))
+        return msk
+    return member
 
 
 def _stale_row_select(fresh, stale_means, cl, stale_clusters, C: int):
@@ -692,7 +765,8 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                              wire_block: int = 1024,
                              intra_done: bool = False,
                              alive=None, conn=None,
-                             stale=None, stale_clusters=None):
+                             stale=None, stale_clusters=None,
+                             wire_ef=None, wire_ef_gamma: float = 1.0):
     """Gossip mix where only compact wire-encoded deltas cross the backhaul.
 
     delta: (R_local, *dims) shard-local replica deltas.  Each cluster's
@@ -762,7 +836,23 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
     fresh compute — bounded-stale gossip.  Requires ``intra_done=True``
     (both buffers are already per-cluster means).
 
-    Returns the locally mixed deltas, same shape/dtype as ``delta``.
+    ``wire_ef`` / ``wire_ef_gamma`` (DESIGN.md §Wire format v2): CHOCO-
+    style wire-side error feedback.  ``wire_ef`` is a pair
+    ``(est_self, est_wsum)`` of f32 arrays shaped like ``delta``
+    (replicated within each cluster, like ``intra_done`` rows) holding
+    the network's shared estimate of each cluster's mean and its
+    mixing-weighted neighborhood sum.  The wire then carries the encoded
+    DIFFERENCE to the estimate (quantization error scales with the
+    consensus gap instead of ||mean||) and the return value becomes the
+    triple ``(y, est_self+, est_wsum+)`` — see ``_sparse_mix_rows`` for
+    the update.  Requires ``intra_done=True``; incompatible with
+    ``stale=`` (a stale payload would advance neighbors' estimates with
+    a buffer the sender's own estimate never saw), with ``conn=``
+    partitions (senders and receivers would apply different updates),
+    and with ``hkind="none"`` (no wire to feed back on).
+
+    Returns the locally mixed deltas, same shape/dtype as ``delta``
+    (plus the two advanced f32 estimate arrays when ``wire_ef`` is on).
     """
     axes = _axes_tuple(axes)
     C, Dev = clusters, dev
@@ -778,6 +868,23 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
             raise ValueError(
                 f"stale_clusters {stale_clusters} not a non-empty subset "
                 f"of range({C})")
+    if wire_ef is not None:
+        if not intra_done:
+            raise ValueError("wire_ef requires intra_done=True rows (the "
+                             "estimates track per-cluster means)")
+        if stale is not None:
+            raise ValueError("wire_ef is incompatible with stale= payloads "
+                             "(neighbors' estimates would advance on a "
+                             "buffer the sender's estimate never saw)")
+        if conn is not None:
+            raise ValueError("wire_ef is incompatible with conn= "
+                             "partitions (sender and receiver estimate "
+                             "updates would desync)")
+        if hkind == "none":
+            raise ValueError("wire_ef requires a gossip hkind (no wire to "
+                             "feed back on)")
+        if len(wire_ef) != 2:
+            raise ValueError("wire_ef must be (est_self, est_wsum)")
     if alive is not None and not intra_done:
         # premultiplied rows make every downstream mean the live-device
         # mean through the UNCHANGED unmasked graph (see
@@ -839,11 +946,22 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                                      stale_clusters, C)
         if cluster_theta is not None:
             plans = _wire_plans(cluster_theta, **plan_kw)
+        ef_kw = {}
+        if wire_ef is not None:
+            ef_rows = tuple(
+                e.astype(jnp.float32).reshape((C, Dev) + dims)[:, 0]
+                .reshape(C, L) for e in wire_ef)
+            ef_kw = dict(wire_ef=ef_rows, wire_ef_gamma=wire_ef_gamma,
+                         member=_member_rows(C))
         y = _sparse_mix_rows(send, means, jnp.arange(C), C, hkind,
                              p_edge, seed, rotate=_roll_rows(C),
-                             plans=plans, conn=conn, **wire_kw)
-        y = jnp.broadcast_to(y.reshape((C, 1) + dims), (C, Dev) + dims)
-        return y.reshape(delta.shape).astype(delta.dtype)
+                             plans=plans, conn=conn, **ef_kw, **wire_kw)
+        bcast = lambda r: jnp.broadcast_to(
+            r.reshape((C, 1) + dims), (C, Dev) + dims).reshape(delta.shape)
+        if wire_ef is not None:
+            y, es, ew = y
+            return bcast(y).astype(delta.dtype), bcast(es), bcast(ew)
+        return bcast(y).astype(delta.dtype)
 
     n = _n_shards(axes)
     sizes = _axis_sizes(axes)
@@ -880,17 +998,30 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                     return _rotate_flat(t, axes, o * g, sizes)
                 return _rotate(t, axes[0], o * g, n, src=src)
 
+            ef_kw = {}
+            if wire_ef is not None:
+                ef_rows = tuple(e.astype(jnp.float32)[0].reshape(L)[None]
+                                for e in wire_ef)
+                ef_kw = dict(wire_ef=ef_rows, wire_ef_gamma=wire_ef_gamma,
+                             member=_member_shard(axes))
             y = _sparse_mix_rows(send, mean, cl, C, hkind, p_edge, seed,
-                                 rot, plans=plans, conn=conn, **wire_kw)
-            y = jnp.broadcast_to(y.reshape((1,) + dims), delta.shape)
-            return y.astype(delta.dtype)
-        return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
-                                hkind, p_edge, seed, plans=plans,
-                                cluster_theta=cluster_theta,
-                                plan_kw=plan_kw, conn=conn, stale=stale,
-                                stale_clusters=stale_clusters,
-                                **wire_kw).reshape(delta.shape).astype(
-                                    delta.dtype)
+                                 rot, plans=plans, conn=conn, **ef_kw,
+                                 **wire_kw)
+            bcast = lambda r: jnp.broadcast_to(r.reshape((1,) + dims),
+                                               delta.shape)
+            if wire_ef is not None:
+                y, es, ew = y
+                return bcast(y).astype(delta.dtype), bcast(es), bcast(ew)
+            return bcast(y).astype(delta.dtype)
+        return _fallback_out(
+            _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev,
+                             hkind, p_edge, seed, plans=plans,
+                             cluster_theta=cluster_theta,
+                             plan_kw=plan_kw, conn=conn, stale=stale,
+                             stale_clusters=stale_clusters,
+                             wire_ef=wire_ef,
+                             wire_ef_gamma=wire_ef_gamma, **wire_kw),
+            delta, wire_ef)
 
     if R_local % Dev == 0:
         # layout B: Cl whole clusters per shard.
@@ -943,30 +1074,56 @@ def sparse_neighbor_exchange(delta, *, clusters: int, dev: int, axes,
                 out.append(jnp.stack(stacked, axis=0))
             return jax.tree.unflatten(treedef, out)
 
+        ef_kw = {}
+        if wire_ef is not None:
+            ef_rows = tuple(
+                e.astype(jnp.float32).reshape((Cl, Dev) + dims)[:, 0]
+                .reshape(Cl, L) for e in wire_ef)
+            ef_kw = dict(wire_ef=ef_rows, wire_ef_gamma=wire_ef_gamma,
+                         member=_member_rows_b(axes, Cl))
         y = _sparse_mix_rows(send, means, cl, C, hkind, p_edge, seed, rot,
-                             plans=plans, conn=conn, **wire_kw)
-        y = jnp.broadcast_to(y.reshape((Cl, 1) + dims), (Cl, Dev) + dims)
-        return y.reshape(delta.shape).astype(delta.dtype)
+                             plans=plans, conn=conn, **ef_kw, **wire_kw)
+        bcast = lambda r: jnp.broadcast_to(
+            r.reshape((Cl, 1) + dims),
+            (Cl, Dev) + dims).reshape(delta.shape)
+        if wire_ef is not None:
+            y, es, ew = y
+            return bcast(y).astype(delta.dtype), bcast(es), bcast(ew)
+        return bcast(y).astype(delta.dtype)
 
-    return _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
-                            p_edge, seed, plans=plans,
-                            cluster_theta=cluster_theta, plan_kw=plan_kw,
-                            conn=conn, stale=stale,
-                            stale_clusters=stale_clusters,
-                            **wire_kw).reshape(delta.shape).astype(
-                                delta.dtype)
+    return _fallback_out(
+        _sparse_fallback(f32.reshape(R_local, L), axes, C, Dev, hkind,
+                         p_edge, seed, plans=plans,
+                         cluster_theta=cluster_theta, plan_kw=plan_kw,
+                         conn=conn, stale=stale,
+                         stale_clusters=stale_clusters, wire_ef=wire_ef,
+                         wire_ef_gamma=wire_ef_gamma, **wire_kw),
+        delta, wire_ef)
+
+
+def _fallback_out(out, delta, wire_ef):
+    """Reshape/cast ``_sparse_fallback`` row outputs back to the caller's
+    delta layout (triple when wire-EF estimates ride along)."""
+    rs = lambda a: a.reshape(delta.shape)
+    if wire_ef is not None:
+        y, es, ew = out
+        return rs(y).astype(delta.dtype), rs(es), rs(ew)
+    return rs(out).astype(delta.dtype)
 
 
 def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
                      *, plans, wb, wire_dtype, dense_dtype,
                      cluster_theta=None, plan_kw=None, conn=None,
-                     stale=None, stale_clusters=None):
+                     stale=None, stale_clusters=None, wire_ef=None,
+                     wire_ef_gamma=1.0):
     """Misaligned (C, Dev) layouts: masked psum of the dense cluster means,
     then the sparse operator applied LOCALLY (encode/decode round-trip on
     the neighbor terms).  Math identical to the structured paths; wire
     bytes are the dense means (same contract as ``mix_local``'s fallback).
     The sum/Dev formula is intra_done-agnostic: raw rows sum to the cluster
     sum, pre-averaged rows sum to Dev * mean — both divide to the mean.
+    Wire-EF estimates (replicated within each cluster) reduce through the
+    same sum/Dev and the per-cluster updates are gathered back per row.
     """
     R_local, L = f32_rows.shape
     r0 = _flat_shard_index(axes) * R_local
@@ -985,16 +1142,30 @@ def _sparse_fallback(f32_rows, axes, C, Dev, hkind, p_edge, seed,
                                  stale_clusters, C)
     if cluster_theta is not None:
         plans = _wire_plans(cluster_theta, **plan_kw)
+    ef_kw = {}
+    if wire_ef is not None:
+        ef_rows = []
+        for e in wire_ef:
+            ep = jnp.tensordot(
+                onehot, e.astype(jnp.float32).reshape(R_local, L),
+                axes=(0, 0))
+            ef_rows.append(jax.lax.psum(ep, axes) / Dev)
+        ef_kw = dict(wire_ef=tuple(ef_rows), wire_ef_gamma=wire_ef_gamma,
+                     member=_member_rows(C))
     y = _sparse_mix_rows(send, means, jnp.arange(C), C, hkind, p_edge,
                          seed, rotate=_roll_rows(C), plans=plans,
                          wb=wb, wire_dtype=wire_dtype,
-                         dense_dtype=dense_dtype, conn=conn)
-    return jnp.take(y, cl, axis=0)
+                         dense_dtype=dense_dtype, conn=conn, **ef_kw)
+    tk = lambda a: jnp.take(a, cl, axis=0)
+    if wire_ef is not None:
+        return tuple(tk(a) for a in y)
+    return tk(y)
 
 
 def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
                      rotate, *, plans, wb, wire_dtype, dense_dtype,
-                     conn=None):
+                     conn=None, wire_ef=None, wire_ef_gamma=1.0,
+                     member=None):
     """Shared core: encode rows per wire plan, rotate each plan's payload
     per band (partial perms for per-cluster level groups), decode, sum.
 
@@ -1018,13 +1189,40 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
     the source conn (zero-filled rows stay zero either way), the lost
     band weight is absorbed into the self term once per band, and a
     partitioned receiver keeps its own mean.
+
+    ``wire_ef``: CHOCO-style wire error feedback (DESIGN.md §Wire format
+    v2) — a pair of (m, L) f32 estimate rows ``(est_self, est_wsum)``
+    where ``est_self`` is the network's shared estimate x̂ of THIS row
+    and ``est_wsum`` tracks sum_j w_ij x̂_j.  The payload becomes the
+    encoded DIFFERENCE ``means - est_self`` (so wire quantization error
+    scales with the consensus gap, not ||means||); every row also
+    decodes its OWN payload locally (``member(src, rows)`` masks the
+    plans this row actually sends under — bit-identical to what its
+    neighbors receive, no wire) to advance the estimates in lockstep:
+
+        est_self+ = est_self + dec_self
+        est_wsum+ = est_wsum + diag * dec_self + sum_o coef_o * dec_o
+        y         = self_dense + gamma * (est_wsum+ - est_self+)
+
+    and the return value is the triple ``(y, est_self+, est_wsum+)``.
+    A dense plan ships the difference exactly, so est_self+ == means
+    bit-for-bit and y is the plain mix at gamma = 1 (up to one f32
+    add/sub reassociation).  Incompatible with ``conn`` (a partition
+    would desync the sender's and receivers' estimate updates) — the
+    caller raises before this point.
     """
     m, L = means.shape
     diag, bands, _ = _mixing_cached(hkind, C, p_edge, seed)
+    if wire_ef is not None:
+        assert conn is None  # caller contract: partitions desync estimates
+        est_self, est_wsum = (e.astype(jnp.float32) for e in wire_ef)
+        send = means - est_self
+    else:
+        send = means
     payloads = []
     for key, src, rows in plans:
-        rows_x = means if rows is None else jnp.take(
-            means, np.asarray(rows, np.int64), axis=0)
+        rows_x = send if rows is None else jnp.take(
+            send, np.asarray(rows, np.int64), axis=0)
         if key[0] == "dense":
             payloads.append(((rows_x.astype(dense_dtype),), None, src,
                              rows))
@@ -1032,24 +1230,50 @@ def _sparse_mix_rows(means, self_dense, cl, C, hkind, p_edge, seed,
             payloads.append((tuple(wire_encode(
                 rows_x, key[1], wire_block=wb, wire_dtype=wire_dtype)),
                 key[1], src, rows))
+
+    def _dec(payload, k_b):
+        if k_b is None:
+            return payload[0].astype(jnp.float32)
+        return wire_decode(Wire(*payload), L, wire_block=wb,
+                           wire_dtype=wire_dtype, k_b=k_b)
+
     take = lambda v: jnp.take(jnp.asarray(v, jnp.float32), cl)
     cw = None if conn is None else jnp.asarray(conn, jnp.float32)
-    y = take(diag)[:, None] * self_dense
+    if wire_ef is None:
+        y = take(diag)[:, None] * self_dense
+    else:
+        # Local decode of this row's own payload: the exact bits every
+        # neighbor adds to its estimate of this row (no wire crossed).
+        # ``member`` masks to the plans this row sends under — each
+        # (row, shard) slot belongs to exactly one plan, so the sum is
+        # just its own decode routed through the right (key, rows) plan.
+        dec_self = jnp.zeros((m, L), jnp.float32)
+        for payload, k_b, src, rows in payloads:
+            d = _dec(payload, k_b)
+            if rows is not None:
+                d = jnp.zeros((m, L), jnp.float32).at[
+                    np.asarray(rows, np.int64)].set(d)
+            msk = None if member is None else member(src, rows)
+            if msk is not None:
+                d = msk[:, None] * d
+            dec_self = dec_self + d
+        est_self_new = est_self + dec_self
+        y = est_wsum + take(diag)[:, None] * dec_self
     absorbed = None
     for o, coef in sorted(bands.items()):
         c_o = None if cw is None else jnp.take(cw, (cl - o) % C)
         for payload, k_b, src, rows in payloads:
-            moved = rotate(payload, o, src, rows)
-            if k_b is None:
-                dec = moved[0].astype(jnp.float32)
-            else:
-                dec = wire_decode(Wire(*moved), L, wire_block=wb)
+            dec = _dec(rotate(payload, o, src, rows), k_b)
             if c_o is not None:
                 dec = c_o[:, None] * dec
             y = y + take(coef)[:, None] * dec
         if c_o is not None:
             a_o = take(coef) * (1.0 - c_o)
             absorbed = a_o if absorbed is None else absorbed + a_o
+    if wire_ef is not None:
+        est_wsum_new = y
+        y = self_dense + wire_ef_gamma * (est_wsum_new - est_self_new)
+        return y, est_self_new, est_wsum_new
     if cw is not None and absorbed is not None:
         ab = absorbed[:, None]
         y = jnp.where(ab > 0, y + ab * self_dense, y)

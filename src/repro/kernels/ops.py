@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels import wire_pack
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_pallas
 from repro.kernels.topk_compress import topk_compress_pallas
@@ -89,6 +90,39 @@ def topk_compress(x, theta, *, block=1024, impl=None, ef=None):
     # the bytes.
     resid = jnp.where(keep, jnp.float32(0), xf)
     return masked.astype(x.dtype), resid.astype(resid_dtype)
+
+
+def pack_offsets(off, *, wb, mode, impl=None):
+    """Sorted ascending block-local offsets (m, nb, k_b) int32 -> packed
+    uint8 (m, nb, nbytes) in the static ``mode`` ("u8" | "p4") chosen by
+    ``core.wire_format.offset_mode``."""
+    if _route(impl) == "pallas":
+        return wire_pack.pack_offsets_pallas(off, wb=wb, mode=mode,
+                                             interpret=_interp())
+    return wire_pack.pack_offsets_jnp(off, wb=wb, mode=mode)
+
+
+def unpack_offsets(packed, *, wb, k_b, mode, impl=None):
+    """Inverse of ``pack_offsets`` (exact: the encodings are lossless for
+    distinct sorted offsets)."""
+    if _route(impl) == "pallas":
+        return wire_pack.unpack_offsets_pallas(packed, wb=wb, k_b=k_b,
+                                               mode=mode,
+                                               interpret=_interp())
+    return wire_pack.unpack_offsets_jnp(packed, wb=wb, k_b=k_b, mode=mode)
+
+
+def encode_blocks(xb, k_b, *, wire_dtype, impl=None):
+    """Fused wire encode: (m, nb, wb) f32 -> (vals, off, scale) with
+    ASCENDING offsets; values already quantized/packed for the wire
+    dtype.  Pallas path is one kernel (bisect + compaction + quantize +
+    nibble pack — the dense rows are read from HBM once); jnp path is
+    the top_k + sort reference with identical results on magnitude-
+    separated data (see ``wire_pack.encode_blocks_pallas``)."""
+    if _route(impl) == "pallas":
+        return wire_pack.encode_blocks_pallas(xb, k_b, wire_dtype=wire_dtype,
+                                              interpret=_interp())
+    return wire_pack.encode_blocks_jnp(xb, k_b, wire_dtype=wire_dtype)
 
 
 def rglru(log_a, gated_x, *, h0=None, impl=None):

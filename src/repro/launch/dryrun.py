@@ -134,7 +134,8 @@ def overlap_equivalence_smoke():
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                verbose: bool = True, sparse_gossip: bool = False,
-               theta_spread: str = None, overlap: bool = False):
+               theta_spread: str = None, overlap: bool = False,
+               wire_dtype: str = None):
     """``theta_spread``: comma-separated theta levels assigned round-robin
     to the clusters (e.g. "0.05,0.8") — lowers the train cell with the
     PER-CLUSTER static dispatch, plus an all-max baseline and a
@@ -156,6 +157,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     hcef = bundle.hcef
     if sparse_gossip or theta_spread:
         hcef = dataclasses.replace(hcef, sparse_gossip=True)
+    if wire_dtype:
+        # wire value format only matters on the sparse gossip payload path
+        hcef = dataclasses.replace(hcef, sparse_gossip=True,
+                                   wire_dtype=wire_dtype)
     shapes = {s.name: s for s in bundle.shapes}
     shape = shapes[shape_name]
     if shape_name in bundle.skip_shapes:
@@ -360,6 +365,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
+        "wire_dtype": hcef.wire_dtype,
         "status": "ok", "kind": shape.kind, "param_count": pcount,
         "n_chips": n_chips,
         "seq_len": shape.seq_len, "global_batch": shape.global_batch,
@@ -424,13 +430,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
                         sparse_gossip: bool = False,
                         theta_spread: str = None,
-                        overlap: bool = False) -> dict:
+                        overlap: bool = False,
+                        wire_dtype: str = None) -> dict:
     """Run one cell in an isolated subprocess (memory isolation) + cache."""
     tag = ".sparse" if sparse_gossip else ""
     if theta_spread:
         tag += ".spread" + theta_spread.replace(",", "_")
     if overlap:
         tag += ".overlap"
+    if wire_dtype:
+        tag += f".wd{wire_dtype}"
     out = out_dir / f"{arch}.{shape}.{mesh_kind}{tag}.json"
     if out.exists():
         return json.loads(out.read_text())
@@ -442,6 +451,8 @@ def run_cell_subprocess(arch, shape, mesh_kind, out_dir: Path,
         cmd += ["--theta-spread", theta_spread]
     if overlap:
         cmd.append("--overlap")
+    if wire_dtype:
+        cmd += ["--wire-dtype", wire_dtype]
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parents[2])
     t0 = time.time()
@@ -477,6 +488,12 @@ def main():
                          "the gossip_overlap verdict (permutes off the "
                          "local-step critical path) plus a staleness=0 "
                          "bit-for-bit equivalence smoke")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=["f32", "bf16", "int8", "int4", "fp8"],
+                    help="wire value encoding for the sparse gossip "
+                         "payload (implies --sparse-gossip); the "
+                         "gossip_bytes_scale_with_theta verdict sizes the "
+                         "expected permute bytes from the v2 wire format")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -491,7 +508,8 @@ def main():
                         arch, s.name, mesh_kind, RESULTS_DIR,
                         sparse_gossip=args.sparse_gossip,
                         theta_spread=args.theta_spread,
-                        overlap=args.overlap)
+                        overlap=args.overlap,
+                        wire_dtype=args.wire_dtype)
                     tag = res["status"]
                     ok += tag == "ok"
                     err += tag == "error"
@@ -504,7 +522,8 @@ def main():
     res = lower_cell(args.arch, args.shape, args.mesh == "multi",
                      sparse_gossip=args.sparse_gossip,
                      theta_spread=args.theta_spread,
-                     overlap=args.overlap)
+                     overlap=args.overlap,
+                     wire_dtype=args.wire_dtype)
     if args.out:
         Path(args.out).write_text(json.dumps(res, indent=1))
     # gate CI on the HLO verdicts: a lowered-but-wrong wire path must fail

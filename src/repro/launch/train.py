@@ -52,7 +52,11 @@ def main():
     ap.add_argument("--sparse-gossip", action="store_true",
                     help="route gossip through the theta-scaled wire path")
     ap.add_argument("--wire-dtype", default=None,
-                    choices=["f32", "bf16", "int8"])
+                    choices=["f32", "bf16", "int8", "int4", "fp8"])
+    ap.add_argument("--wire-ef", action="store_true",
+                    help="CHOCO-style wire error feedback: gossip payloads "
+                         "carry the difference to a shared neighbor "
+                         "estimate (requires --sparse-gossip and a mesh)")
     ap.add_argument("--overlap", action="store_true",
                     help="overlapped round engine (DESIGN.md §Overlap): "
                          "hide gossip behind local compute with "
@@ -76,11 +80,12 @@ def main():
     bundle = get_config(args.arch)
     cfg = smoke_model(bundle.model) if args.smoke else bundle.model
     hcef = bundle.hcef
-    if args.sparse_gossip or args.wire_dtype or args.overlap:
+    if args.sparse_gossip or args.wire_dtype or args.overlap or args.wire_ef:
         import dataclasses
         hcef = dataclasses.replace(
             hcef, sparse_gossip=hcef.sparse_gossip or args.sparse_gossip,
             wire_dtype=args.wire_dtype or hcef.wire_dtype,
+            wire_ef=hcef.wire_ef or args.wire_ef,
             overlap=args.overlap,
             staleness=args.staleness if args.overlap else 0)
 

@@ -62,13 +62,13 @@ class FedSimConfig:
     # the wire format's exact byte ratio instead of the ideal theta fraction.
     sparse_gossip: bool = False
     theta_levels: tuple = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
-    wire_dtype: str = "f32"  # f32 | bf16 | int8
+    wire_dtype: str = "f32"  # f32 | bf16 | int8 | int4 | fp8
     wire_block: int = 1024
 
     def __post_init__(self):
         # mirror HCEFConfig's validation so bad wire configs fail at
         # construction, not rounds later inside compression_ratio_bytes
-        if self.wire_dtype not in ("f32", "bf16", "int8"):
+        if self.wire_dtype not in ("f32", "bf16", "int8", "int4", "fp8"):
             raise ValueError(f"wire_dtype {self.wire_dtype!r}")
         if self.sparse_gossip:
             validate_theta_levels(self.theta_levels)

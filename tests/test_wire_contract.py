@@ -61,7 +61,7 @@ def test_theta_level_grid_validated_at_config_construction():
 # wire_fraction: capped at 1.0 (dense fallback), monotone in theta
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("wd", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("wd", ["f32", "bf16", "int8", "int4", "fp8"])
 @pytest.mark.parametrize("dense_bits", [16, 32])
 def test_wire_fraction_capped_and_monotone(wd, dense_bits):
     theta = np.linspace(0.01, 1.0, 50)

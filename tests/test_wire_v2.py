@@ -1,0 +1,326 @@
+"""Wire format v2 (DESIGN.md §Wire format v2): property-style roundtrips
+for the packed int4/fp8 value encodings and the delta-packed offsets, the
+Pallas interpret-mode parity of the pack/unpack/fused-encode kernels, and
+the CHOCO-style wire error feedback contract.
+
+Error-bound table (scale = per-block max |value| of the kept set):
+  f32   exact (bit-for-bit)
+  bf16  |ref| * 2^-8          (8-bit mantissa truncation)
+  int8  scale / 254           (round to 127 levels)
+  fp8   |ref| * 2^-3 + scale * 2^-9   (e4m3: 3 mantissa bits + subnormals)
+  int4  scale / 14            (round to 7 levels)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire_format as wf
+from repro.dist.collectives import Wire, wire_decode, wire_encode, wire_k
+from repro.kernels import wire_pack
+
+V2 = ("int4", "fp8")
+ALL = ("f32", "bf16", "int8", "int4", "fp8")
+
+
+def _rows(rng, m, L, wb):
+    """Magnitude-separated test rows: per block, |x| is a permutation of
+    (1..wb)/wb with random signs — every top-k set is unique and the
+    magnitude gap (1/wb) is far above the encode kernel's bisect
+    resolution (2^-16 of the block max), so jnp top_k and the fused
+    Pallas encode provably agree on the kept set."""
+    pad = (-L) % wb
+    nb = (L + pad) // wb
+    mag = np.stack([rng.permutation(wb) + 1.0
+                    for _ in range(m * nb)]).reshape(m, nb * wb) / wb
+    x = mag * rng.choice([-1.0, 1.0], size=mag.shape)
+    return np.asarray(x[:, :L], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# value + offset roundtrips through the public wire_encode/wire_decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wd", ALL)
+@pytest.mark.parametrize("L", [4096, 2500])  # exact + non-block-multiple
+@pytest.mark.parametrize("theta", [0.05, 0.25, 1.0])
+def test_wire_roundtrip_error_bounds(wd, L, theta):
+    rng = np.random.default_rng(hash((wd, L, theta)) % 2**32)
+    m, wb = 3, 1024
+    k_b = wire_k(theta, L, wb)
+    x = _rows(rng, m, L, wb)
+    wire = wire_encode(jnp.asarray(x), k_b, wire_block=wb, wire_dtype=wd)
+    dec = np.asarray(wire_decode(wire, L, wire_block=wb, wire_dtype=wd,
+                                 k_b=k_b))
+    # reference: per-block top-k_b mask over the zero-padded rows
+    pad = (-L) % wb
+    xp = np.pad(x, ((0, 0), (0, pad))).reshape(m, -1, wb)
+    order = np.argsort(-np.abs(xp), axis=-1, kind="stable")
+    mask = np.zeros_like(xp, dtype=bool)
+    np.put_along_axis(mask, order[..., :k_b], True, axis=-1)
+    ref = np.where(mask, xp, 0.0).reshape(m, -1)[:, :L]
+    scale = np.abs(np.where(mask, xp, 0.0)).max(-1, keepdims=True)
+    tol = np.broadcast_to({
+        "f32": np.zeros_like(xp),
+        "bf16": np.abs(xp) * 2.0**-8,
+        "int8": scale / 254 + 1e-7,
+        "fp8": np.abs(xp) * 2.0**-3 + scale * 2.0**-9,
+        "int4": scale / 14 + 1e-7,
+    }[wd], xp.shape).reshape(m, -1)[:, :L]
+    err = np.abs(dec - ref)
+    bad = err > tol + 1e-30
+    assert not bad.any(), (wd, theta, err[bad].max())
+    # kept-set parity: decode is nonzero exactly on the top-k mask
+    # (f32/bf16 exact-value formats; quantized formats may round a kept
+    # value to zero but never invent a coordinate)
+    inv = (dec != 0) & ~mask.reshape(m, -1)[:, :L]
+    assert not inv.any(), (wd, theta)
+
+
+def test_wire_theta1_f32_is_dense_bitforbit():
+    """theta=1 f32 wire decodes to the input rows bit-for-bit — the wire
+    can always fall back to shipping exactly the dense mix's bytes."""
+    rng = np.random.default_rng(0)
+    m, L, wb = 2, 2048, 1024
+    x = jnp.asarray(rng.standard_normal((m, L)), jnp.float32)
+    w = wire_encode(x, wire_k(1.0, L, wb), wire_block=wb, wire_dtype="f32")
+    dec = wire_decode(w, L, wire_block=wb, wire_dtype="f32")
+    assert jnp.array_equal(dec, x)
+
+
+@pytest.mark.parametrize("wd", V2)
+def test_v2_payload_shapes_and_bytes(wd):
+    """Shipped nbytes of the v2 Wire arrays equal the wire_format table
+    exactly (the table is what the cost model and HLO verdicts charge)."""
+    m, L, wb = 2, 4096, 1024
+    rng = np.random.default_rng(3)
+    for theta in (0.05, 0.2, 0.8):
+        k_b = wire_k(theta, L, wb)
+        if wf.encoding_reaches_dense(k_b, L, wb, wd, 4):
+            continue
+        w = wire_encode(jnp.asarray(_rows(rng, m, L, wb)), k_b,
+                        wire_block=wb, wire_dtype=wd)
+        nb = L // wb
+        got = sum(int(a.nbytes) for a in w if a is not None) // (m * nb)
+        assert got == wf.block_bytes(wb, k_b, wd), (wd, theta)
+
+
+# ---------------------------------------------------------------------------
+# delta-packed offsets: bijectivity + Pallas interpret parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wb,k_b", [(1024, 1), (1024, 52), (1024, 205),
+                                    (256, 8), (256, 200), (128, 7)])
+def test_offset_pack_bijective(wb, k_b):
+    """pack->unpack is the identity for every sorted distinct offset set
+    (the decode side never sees anything else)."""
+    rng = np.random.default_rng(wb * 1000 + k_b)
+    m, nb = 2, 3
+    off = np.stack([np.sort(rng.choice(wb, size=k_b, replace=False))
+                    for _ in range(m * nb)]).reshape(m, nb, k_b)
+    off = jnp.asarray(off, jnp.int32)
+    for wd in V2:
+        mode = wf.offset_mode(wb, k_b, wd)
+        packed = wire_pack.pack_offsets_jnp(off, wb=wb, mode=mode)
+        back = wire_pack.unpack_offsets_jnp(packed, wb=wb, k_b=k_b,
+                                            mode=mode)
+        assert jnp.array_equal(back, off), (wd, mode)
+
+
+@pytest.mark.parametrize("wb,k_b", [(1024, 52), (1024, 205), (512, 26),
+                                    (2048, 103)])
+def test_offset_pack_pallas_interpret_parity(wb, k_b):
+    """Pallas pack/unpack kernels (interpret mode on CPU) are bit-identical
+    to the jnp reference, including the zero-payload decode contract."""
+    rng = np.random.default_rng(7)
+    m, nb = 2, 4
+    off = np.stack([np.sort(rng.choice(wb, size=k_b, replace=False))
+                    for _ in range(m * nb)]).reshape(m, nb, k_b)
+    off = jnp.asarray(off, jnp.int32)
+    mode = wf.offset_mode(wb, k_b, "int4")
+    pj = wire_pack.pack_offsets_jnp(off, wb=wb, mode=mode)
+    pp = wire_pack.pack_offsets_pallas(off, wb=wb, mode=mode,
+                                       interpret=True)
+    assert jnp.array_equal(pj, pp)
+    uj = wire_pack.unpack_offsets_jnp(pj, wb=wb, k_b=k_b, mode=mode)
+    up = wire_pack.unpack_offsets_pallas(pj, wb=wb, k_b=k_b, mode=mode,
+                                         interpret=True)
+    assert jnp.array_equal(uj, up)
+    assert jnp.array_equal(uj, off)
+    # zero payload (partial-perm ppermute fill) decodes to offset 0 on
+    # both paths — contributions then scatter to coord 0 with value 0
+    zp = jnp.zeros_like(pj)
+    zj = wire_pack.unpack_offsets_jnp(zp, wb=wb, k_b=k_b, mode=mode)
+    zz = wire_pack.unpack_offsets_pallas(zp, wb=wb, k_b=k_b, mode=mode,
+                                         interpret=True)
+    assert jnp.array_equal(zj, zz)
+    assert int(jnp.max(zj)) == 0 and int(jnp.min(zj)) == 0
+
+
+@pytest.mark.parametrize("wd", ALL)
+def test_fused_encode_pallas_interpret_parity(wd):
+    """The fused bisect+compact+quantize encode kernel matches the jnp
+    reference bit-for-bit on magnitude-separated blocks (exact top-k set
+    parity is guaranteed there — see _rows)."""
+    rng = np.random.default_rng(11)
+    m, nb, wb, k_b = 2, 3, 1024, 52
+    xb = jnp.asarray(_rows(rng, m, nb * wb, wb).reshape(m, nb, wb))
+    vj, oj, sj = wire_pack.encode_blocks_jnp(xb, k_b, wire_dtype=wd)
+    vp, op, sp = wire_pack.encode_blocks_pallas(xb, k_b, wire_dtype=wd,
+                                                interpret=True)
+    assert jnp.array_equal(oj, op), wd
+    assert jnp.array_equal(sj, sp), wd
+    assert vj.dtype == vp.dtype and jnp.array_equal(
+        jnp.asarray(vj, jnp.float32), jnp.asarray(vp, jnp.float32)), wd
+
+
+# ---------------------------------------------------------------------------
+# CHOCO wire error feedback (sparse_neighbor_exchange wire_ef=)
+# ---------------------------------------------------------------------------
+
+def _ef_setup(C=4, Dev=2, L=2048, seed=0):
+    from repro.dist.collectives import sparse_neighbor_exchange
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((C * Dev, L)).astype(np.float32)
+    means = x.reshape(C, Dev, L).mean(1)
+    d = jnp.asarray(np.repeat(means, Dev, axis=0))
+    y_exact = sparse_neighbor_exchange(
+        d, clusters=C, dev=Dev, axes=(), theta=1.0, hkind="ring",
+        wire_dtype="f32", intra_done=True)
+    return sparse_neighbor_exchange, C, Dev, d, y_exact
+
+
+def test_wire_ef_theta1_f32_estimates_exact():
+    """Dense f32 difference payloads advance est_self to the means
+    EXACTLY, and the gamma=1 mix equals the plain sparse mix."""
+    sx, C, Dev, d, y_exact = _ef_setup()
+    z = jnp.zeros_like(d)
+    y, es, ew = sx(d, clusters=C, dev=Dev, axes=(), theta=1.0,
+                   hkind="ring", wire_dtype="f32", intra_done=True,
+                   wire_ef=(z, z), wire_ef_gamma=1.0)
+    assert jnp.array_equal(es, d.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_exact),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("wd", ["int8", "int4"])
+def test_wire_ef_converges_to_exact_mix(wd):
+    """On a FIXED input the estimate recursion contracts: the mixed output
+    converges to the exact dense mix even at theta=0.05, where plain
+    top-k gossip stalls at its truncation floor — the whole point of
+    wire-side error feedback."""
+    sx, C, Dev, d, y_exact = _ef_setup()
+    est = (jnp.zeros_like(d), jnp.zeros_like(d))
+    errs = []
+    for _ in range(25):
+        y, e1, e2 = sx(d, clusters=C, dev=Dev, axes=(), theta=0.05,
+                       hkind="ring", wire_dtype=wd, intra_done=True,
+                       wire_ef=est, wire_ef_gamma=1.0)
+        est = (e1, e2)
+        errs.append(float(jnp.abs(y - y_exact).max()))
+    plain = sx(d, clusters=C, dev=Dev, axes=(), theta=0.05, hkind="ring",
+               wire_dtype=wd, intra_done=True)
+    floor = float(jnp.abs(plain - y_exact).max())
+    assert errs[-1] < errs[0] / 10, errs
+    assert errs[-1] < floor / 3, (errs[-1], floor)
+
+
+def test_wire_ef_per_cluster_levels_member_masks():
+    """Mixed per-cluster levels exercise the partial-plan member masks of
+    the local self-decode; the estimates must still converge."""
+    sx, C, Dev, d, y_exact = _ef_setup()
+    ct = (0.05, 0.2, 1.0, 0.05)
+    est = (jnp.zeros_like(d), jnp.zeros_like(d))
+    errs = []
+    for _ in range(25):
+        y, e1, e2 = sx(d, clusters=C, dev=Dev, axes=(), cluster_theta=ct,
+                       hkind="ring", wire_dtype="int8", intra_done=True,
+                       wire_ef=est)
+        est = (e1, e2)
+        errs.append(float(jnp.abs(y - y_exact).max()))
+    assert errs[-1] < errs[0] / 10, errs
+
+
+def test_wire_ef_argument_validation():
+    sx, C, Dev, d, _ = _ef_setup()
+    z = jnp.zeros_like(d)
+    base = dict(clusters=C, dev=Dev, axes=(), theta=0.5, hkind="ring",
+                wire_ef=(z, z))
+    with pytest.raises(ValueError, match="intra_done"):
+        sx(d, intra_done=False, **base)
+    with pytest.raises(ValueError, match="stale"):
+        sx(d, intra_done=True, stale=d, stale_clusters=(0,), **base)
+    with pytest.raises(ValueError, match="conn"):
+        sx(d, intra_done=True, conn=np.array([1., 0., 1., 1.]), **base)
+    with pytest.raises(ValueError, match="gossip hkind"):
+        sx(d, clusters=C, dev=Dev, axes=(), theta=0.5, hkind="none",
+           intra_done=True, wire_ef=(z, z))
+
+
+def test_wire_ef_config_validation():
+    from repro.configs.base import HCEFConfig
+    with pytest.raises(ValueError, match="sparse_gossip"):
+        HCEFConfig(wire_ef=True)
+    with pytest.raises(ValueError, match="staleness"):
+        HCEFConfig(sparse_gossip=True, wire_ef=True, overlap=True,
+                   staleness=1)
+    with pytest.raises(ValueError, match="gamma"):
+        HCEFConfig(sparse_gossip=True, wire_ef=True, wire_ef_gamma=0.0)
+    HCEFConfig(sparse_gossip=True, wire_ef=True)  # ok
+    HCEFConfig(sparse_gossip=True, wire_ef=True, overlap=True,
+               staleness=0)  # staleness=0 is the synchronous program
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 fake devices")
+def test_wire_ef_round_step_mesh():
+    """End-to-end: the fused round step threads FLState.wire_ef through
+    shard_map on both sparse dispatch paths and advances the estimates."""
+    from repro.configs import get_config, smoke_model
+    from repro.configs.base import FLTopology, HCEFConfig
+    from repro.core.round import FLState, init_state, make_round_step
+    from repro.dist.compat import make_mesh
+    from repro.dist.policies import make_train_policy
+
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=64, d_ff=128)
+    topo = FLTopology(clusters=2, devices_per_cluster=2)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0, sparse_gossip=True,
+                      wire_dtype="int4", theta_levels=(0.05, 0.25, 1.0),
+                      wire_ef=True)
+    R = topo.num_devices
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(0))
+    assert set(state.wire_ef) == {"est_self", "est_wsum"}
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (R * 2 * 2, 32), 0, cfg.vocab_size)}
+    keys = jax.random.split(jax.random.PRNGKey(2), R)
+    rho, theta = jnp.ones(R), jnp.full(R, 0.25)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    policy = make_train_policy(mesh, topo, dp_axes=("data",))
+    shd = lambda t: jax.tree.map(
+        jax.device_put, t, policy.param_shardings(t, stacked=True))
+    st = FLState(params=shd(state.params), momentum=None,
+                 ef=shd(state.ef), round_idx=state.round_idx,
+                 wire_ef={k: shd(v) for k, v in state.wire_ef.items()})
+    moved = lambda s: max(float(jnp.abs(a).max())
+                          for a in jax.tree.leaves(s.wire_ef["est_self"]))
+    with mesh:
+        # per-cluster static dispatch
+        step = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                       gossip=True,
+                                       cluster_levels=(0.25, 0.05)))
+        s1, _ = step(st, batch, rho, theta, keys)
+        assert moved(s1) > 0
+        # traced-theta switch path
+        step2 = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                        gossip=True))
+        s2, _ = step2(st, batch, rho, theta, keys)
+        assert moved(s2) > 0
+        # non-gossip rounds pass the estimates through untouched
+        step3 = jax.jit(make_round_step(cfg, hcef, topo, policy=policy,
+                                        gossip=False))
+        s3, _ = step3(st, batch, rho, theta, keys)
+        assert all(bool(jnp.array_equal(a, b)) for a, b in
+                   zip(jax.tree.leaves(s3.wire_ef),
+                       jax.tree.leaves(st.wire_ef)))
+    with pytest.raises(ValueError, match="mesh"):
+        make_round_step(cfg, hcef, topo, policy=None, gossip=True)
