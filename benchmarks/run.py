@@ -1,8 +1,9 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 Prints ``name,us_per_call,derived`` CSV blocks:
-  1. kernel microbenchmarks (persisted to BENCH_kernels.json at repo root,
-     so the perf trajectory across PRs is recorded);
+  1. kernel microbenchmarks + serving throughput rows (persisted to
+     BENCH_kernels.json at repo root, so the perf trajectory across PRs
+     is recorded);
   2. the paper-reproduction suite (Fig. 2/3 + Table 2; quick mode);
   3. roofline summary from the dry-run artifacts (if present).
 
@@ -34,6 +35,13 @@ def main() -> None:
     print("== kernel microbenchmarks ==")
     from benchmarks import kernels_bench
     rows = kernels_bench.main()
+
+    print("\n== serving: continuous vs static batching ==")
+    from benchmarks import serving_bench
+    srows, _ = serving_bench.bench_rows(smoke=True)
+    for name, us, derived in srows:
+        print(f"{name},{us:.1f},{derived}")
+    rows = rows + srows
     _write_bench_json(rows)
 
     print("\n== overlap: convergence vs staleness ==")

@@ -1,0 +1,242 @@
+"""Serving bench: continuous batching vs static batches under load.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --smoke
+
+Drives BOTH engine paths over the SAME synthetic heavy-traffic request
+stream (Poisson arrivals, mixed prompt lengths, mixed per-request output
+budgets) on the smollm smoke config:
+
+  * static baseline — requests grouped into fixed batches of
+    ``--slots``; every batch decodes until its longest member finishes
+    (the pre-rewrite pad-to-max engine, kept as ``Engine.generate``);
+  * continuous — the scheduler admits/retires per decode step through
+    the paged KV cache (``Engine.serve``), optionally with int8
+    block-scaled KV.
+
+Reports GOODPUT tokens/sec (a request's tokens count only up to its own
+``max_new_tokens`` budget — the static engine's overshoot is exactly the
+waste being measured) and p50/p99 time-to-first-token / per-token
+latency.  Rows merge into BENCH_kernels.json (``serving_static_*`` is
+the baseline row, ``serving_cont_*`` the rewrite); the latency detail
+lands in ``benchmarks/results/serving_bench.json``.
+
+``--require R`` (default 1.5) gates CI: exits nonzero unless continuous
+tokens/sec >= R x static.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+BENCH_JSON = ROOT / "BENCH_kernels.json"
+OUT_JSON = ROOT / "benchmarks" / "results" / "serving_bench.json"
+
+
+def make_workload(*, n_requests, vocab, prompt_lens, budgets, rate_hz,
+                  seed=0):
+    """Poisson arrival stream with mixed prompt/output lengths."""
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate_hz)
+        plen = int(rng.choice(prompt_lens))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.choice(budgets)), arrival=t))
+    return reqs
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def _lat_summary(outs):
+    ttft = [o.ttft for o in outs.values()]
+    tpot = [o.tpot for o in outs.values() if len(o.tokens) > 1]
+    return {"ttft_p50_ms": 1e3 * _pct(ttft, 50),
+            "ttft_p99_ms": 1e3 * _pct(ttft, 99),
+            "tpot_p50_ms": 1e3 * _pct(tpot, 50),
+            "tpot_p99_ms": 1e3 * _pct(tpot, 99)}
+
+
+def run_static(eng, reqs):
+    """Static batches over the arrival stream: fill a batch from the
+    queue (waiting for arrivals), pad prompts to the stream max, decode
+    everyone to the batch's longest budget.  Results of a batch are
+    only observable when the whole batch returns — TTFT is accounted
+    at batch completion (the honest client-side latency of a
+    synchronous batch API)."""
+    from repro.serving.scheduler import RequestOutput
+    S_pad = max(len(r.prompt) for r in reqs)
+    queue = sorted(reqs, key=lambda r: r.arrival)
+    outs = {}
+    t0 = time.perf_counter()
+    now = lambda: time.perf_counter() - t0  # noqa: E731
+    i = 0
+    while i < len(queue):
+        batch = queue[i:i + eng.batch_size]
+        i += len(batch)
+        wait = max(r.arrival for r in batch) - now()
+        if wait > 0:  # batch only forms once its last member arrived
+            time.sleep(wait)
+        prompts = np.zeros((len(batch), S_pad), np.int32)
+        for j, r in enumerate(batch):
+            prompts[j, :len(r.prompt)] = r.prompt  # right-pad (pad attends,
+            # matching the pre-rewrite pad-to-max engine semantics)
+        eng.serve_cfg.max_new_tokens = max(r.max_new_tokens for r in batch)
+        res = eng.generate(prompts)
+        t = now()
+        for j, r in enumerate(batch):
+            o = RequestOutput(rid=r.rid, prompt_len=len(r.prompt),
+                              t_arrival=r.arrival, t_admitted=t,
+                              t_first_token=t, t_done=t)
+            o.tokens = [int(x) for x in res[j][:r.max_new_tokens]]
+            o.finish_reason = "length"
+            outs[r.rid] = o
+    return outs, now()
+
+
+def bench_rows(*, smoke=True, n_requests=32, slots=8, rate_hz=200.0,
+               seed=0, arch="smollm_135m"):
+    """Returns (rows, detail): bench rows for BENCH_kernels.json and the
+    latency-detail dict for the artifact."""
+    import jax
+    from repro.configs import get_config, smoke_model
+    from repro.core import wire_format as wf
+    from repro.models.registry import get_model
+    from repro.serving.engine import Engine, PagedConfig, ServeConfig
+    from repro.serving.scheduler import Request
+
+    cfg = get_config(arch).model
+    if smoke:
+        cfg = smoke_model(cfg)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+
+    page_size = 8
+    prompt_lens = (4, 8, 16, 24)
+    budgets = (4, 8, 16, 64)
+    S_pad = 24  # max prompt, page-aligned
+    max_len = S_pad + max(budgets)
+    reqs = make_workload(n_requests=n_requests, vocab=cfg.vocab_size,
+                         prompt_lens=prompt_lens, budgets=budgets,
+                         rate_hz=rate_hz, seed=seed)
+    total_budget = sum(r.max_new_tokens for r in reqs)
+
+    def engine(kv_dtype=None):
+        return Engine(cfg, params, max_len=max_len, batch_size=slots,
+                      serve=ServeConfig(max_new_tokens=max(budgets)),
+                      paged=PagedConfig(page_size=page_size, max_slots=slots,
+                                        kv_dtype=kv_dtype))
+
+    # -- static baseline (warm up the prefill/decode programs first) --
+    eng_s = engine()
+    eng_s.generate(np.zeros((slots, S_pad), np.int32))
+    static_outs, static_dt = run_static(eng_s, reqs)
+    static_toks = sum(len(o.tokens) for o in static_outs.values())
+    static_tps = static_toks / static_dt
+
+    # -- continuous (+ int8-KV variant); same warmup trick --
+    results = {}
+    for tag, kv in (("cont", None), ("cont_int8kv", "int8")):
+        eng = engine(kv)
+        warm = [Request(rid=10_000 + i, prompt=np.zeros(S_pad, np.int32),
+                        max_new_tokens=max(budgets) if i == 0 else 2)
+                for i in range(2)]
+        eng.serve(warm)
+        t0 = time.perf_counter()
+        outs = eng.serve(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(o.tokens) for o in outs.values())
+        assert toks == total_budget, (toks, total_budget)
+        results[tag] = (outs, dt, toks / dt)
+
+    cont_tps = results["cont"][2]
+    speedup = cont_tps / static_tps
+    kv_ratio = (wf.kv_token_bytes(cfg.num_kv_heads, cfg.head_dim)
+                / wf.kv_token_bytes(cfg.num_kv_heads, cfg.head_dim,
+                                    kv_dtype="int8"))
+    rows = [
+        (f"serving_static_{arch}", 1e6 / static_tps,
+         f"{static_tps:.0f}tok/s_goodput"),
+        (f"serving_cont_{arch}", 1e6 / cont_tps,
+         f"{cont_tps:.0f}tok/s_{speedup:.2f}x_vs_static"),
+        (f"serving_cont_int8kv_{arch}", 1e6 / results["cont_int8kv"][2],
+         f"{results['cont_int8kv'][2]:.0f}tok/s_{kv_ratio:.1f}x_kv_bytes"),
+    ]
+    detail = {
+        "workload": {"n_requests": n_requests, "slots": slots,
+                     "rate_hz": rate_hz, "prompt_lens": list(prompt_lens),
+                     "budgets": list(budgets), "page_size": page_size,
+                     "arch": arch, "smoke": smoke, "seed": seed,
+                     "total_budget_tokens": total_budget},
+        "static": {"tokens_per_s": static_tps, "wall_s": static_dt,
+                   **_lat_summary(static_outs)},
+        "continuous": {"tokens_per_s": cont_tps,
+                       "wall_s": results["cont"][1],
+                       **_lat_summary(results["cont"][0])},
+        "continuous_int8kv": {"tokens_per_s": results["cont_int8kv"][2],
+                              "wall_s": results["cont_int8kv"][1],
+                              "kv_bytes_ratio": kv_ratio,
+                              **_lat_summary(results["cont_int8kv"][0])},
+        "speedup_cont_vs_static": speedup,
+    }
+    return rows, detail
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--require", type=float, default=1.5,
+                    help="fail unless continuous >= R x static tokens/sec")
+    ap.add_argument("--out", type=Path, default=OUT_JSON)
+    args = ap.parse_args(argv)
+
+    rows, detail = bench_rows(smoke=args.smoke, n_requests=args.requests,
+                              slots=args.slots, rate_hz=args.rate,
+                              seed=args.seed)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    for tag in ("static", "continuous", "continuous_int8kv"):
+        d = detail[tag]
+        print(f"  {tag}: {d['tokens_per_s']:.0f} tok/s  "
+              f"ttft p50/p99 {d['ttft_p50_ms']:.0f}/{d['ttft_p99_ms']:.0f} ms"
+              f"  tpot p50/p99 {d['tpot_p50_ms']:.1f}/{d['tpot_p99_ms']:.1f}"
+              f" ms")
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(detail, indent=1) + "\n")
+    print(f"wrote {args.out}")
+
+    # merge serving rows into the persistent kernel-bench record
+    if BENCH_JSON.exists():
+        payload = json.loads(BENCH_JSON.read_text())
+        payload.update({name: {"us_per_call": round(us, 1),
+                               "derived": derived}
+                        for name, us, derived in rows})
+        BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
+        print(f"merged serving rows into {BENCH_JSON}")
+
+    speedup = detail["speedup_cont_vs_static"]
+    verdict = speedup >= args.require
+    print(f"continuous vs static: {speedup:.2f}x "
+          f"(require >= {args.require:.2f}x): "
+          f"{'OK' if verdict else 'FAIL'}")
+    if not verdict:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,14 @@
 """Batched serving example: prefill + token-by-token decode with a KV cache.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2_7b]
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen2_7b] [--n 3]
 
 Serves the reduced config of any assigned architecture (dense / MoE / SSM /
-hybrid / enc-dec all work) with batched requests; the same jitted functions
-run sharded on a real pod via repro.dist.policies.make_serve_policy.
+hybrid / enc-dec all work) with batched requests; any number of prompts is
+legal (partial batches are padded with masked dummy rows, larger sets are
+chunked).  --continuous (attention families) demos the production path:
+continuous batching over the paged KV cache with per-request prompt and
+output lengths.  The same jitted functions run sharded on a real pod via
+repro.dist.policies.make_serve_policy.
 """
 import argparse
 import sys
@@ -16,14 +20,19 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_model
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving.engine import Engine, PagedConfig, ServeConfig
+from repro.serving.scheduler import Request
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_7b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine batch size / decode slots")
+    ap.add_argument("--n", type=int, default=3,
+                    help="number of prompts (any value: != batch is fine)")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true")
     args = ap.parse_args()
 
     cfg = smoke_model(get_config(args.arch).model)
@@ -33,19 +42,38 @@ def main():
 
     engine = Engine(cfg, params, max_len=64, batch_size=args.batch,
                     serve=ServeConfig(max_new_tokens=args.new_tokens,
-                                      temperature=0.8))
+                                      temperature=0.8),
+                    paged=PagedConfig(page_size=8, max_slots=args.batch))
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (args.batch, 16)).astype(
-        np.int32)
+
+    if args.continuous:
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            int(rng.integers(4, 17))
+                                            ).astype(np.int32),
+                        max_new_tokens=int(rng.integers(2,
+                                                        args.new_tokens + 1)),
+                        arrival=0.003 * i)
+                for i in range(args.n)]
+        outs = engine.serve(reqs)
+        print(f"arch={args.arch} family={cfg.family} (continuous)")
+        for rid in sorted(outs):
+            o = outs[rid]
+            print(f"request {rid}: prompt_len={o.prompt_len} "
+                  f"ttft={o.ttft*1e3:.1f}ms -> generated {o.tokens}")
+        return
+
+    prompts = rng.integers(0, cfg.vocab_size, (args.n, 16)).astype(np.int32)
     extra = {}
     if cfg.frontend == "vit_stub":
         extra["patch_embeds"] = np.zeros(
-            (args.batch, cfg.frontend_tokens, cfg.d_model), np.float32)
+            (args.n, cfg.frontend_tokens, cfg.d_model), np.float32)
     if cfg.family == "encdec":
         extra["frames"] = rng.normal(
-            0, 1, (args.batch, 16, cfg.d_model)).astype(np.float32)
+            0, 1, (args.n, 16, cfg.d_model)).astype(np.float32)
     out = engine.generate(prompts, extra_inputs=extra or None)
-    print(f"arch={args.arch} family={cfg.family}")
+    print(f"arch={args.arch} family={cfg.family} "
+          f"({args.n} prompts on batch_size={args.batch})")
     for i, row in enumerate(out):
         print(f"request {i}: prompt={prompts[i][:6].tolist()}... "
               f"-> generated {row.tolist()}")

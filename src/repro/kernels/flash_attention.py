@@ -21,6 +21,132 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+# ---------------------------------------------------------------------------
+# Paged KV gather (DESIGN.md §Serving contract)
+# ---------------------------------------------------------------------------
+
+def gather_kv_pages(pages, page_table, *, contiguous=False):
+    """Assemble per-request KV views from the paged pool.
+
+    pages: (NP, ps, ...) physical page pool (page 0 = null);
+    page_table: (B, P) int32 physical page ids per request.
+    Returns (B, P * ps, ...) — request b's logical positions in order.
+
+    ``contiguous=True`` is the dense fallback: the caller asserts (host-
+    side, static) that slot b owns exactly pages [1 + b*P, 1 + (b+1)*P),
+    so the gather degenerates to a reshape of the pool — zero data
+    movement, bit-for-bit identical to the gather (pinned in
+    tests/test_serving.py).
+    """
+    B, P = page_table.shape
+    ps = pages.shape[1]
+    tail = pages.shape[2:]
+    if contiguous:
+        return jax.lax.dynamic_slice_in_dim(pages, 1, B * P, 0).reshape(
+            (B, P * ps) + tail)
+    return jnp.take(pages, page_table, axis=0).reshape((B, P * ps) + tail)
+
+
+def _paged_kernel(pt_ref, kl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *, ps, np_, scale):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kvl = kl_ref[b]
+
+    @pl.when(j * ps < kvl)  # pages fully past kv_len issue no MXU work
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kvl, s, NEG_INF)
+        m_prev = m_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(kpos < kvl, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_scr[...][:, 0] * corr + p.sum(axis=-1))[:, None]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(j == np_ - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...][:, 0], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...][:, 0].astype(m_ref.dtype)
+        l_ref[0, 0] = l.astype(l_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, kv_len, *,
+                                  softmax_scale=None, interpret=False):
+    """Single-token decode attention reading KV through a page table.
+
+    q: (B, 1, H, Dh); k_pages/v_pages: (NP, ps, KH, Dh); page_table:
+    (B, P) int32; kv_len: (B,) int32.  Returns (out (B,1,H,Dh),
+    m (B,1,KH,G), l (B,1,KH,G)) — the same normalized-out + stats
+    contract as ``ref.decode_attention_jnp(return_stats=True)`` so the
+    caller folds the current token's (k, v) in with
+    ``decode_attention_combine``.
+
+    The page table and kv_len ride in as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``): the grid's page step j DMAs physical
+    page ``page_table[b, j]`` directly from HBM — the gather never
+    materializes a contiguous KV copy.
+    """
+    B, Sq, H, Dh = q.shape
+    NP, ps, KH, _ = k_pages.shape
+    _, P = page_table.shape
+    G = H // KH
+    scale = softmax_scale if softmax_scale is not None else Dh ** -0.5
+
+    qt = q.reshape(B, KH, G, Dh)  # Sq == 1
+    kern = functools.partial(_paged_kernel, ps=ps, np_=P, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KH, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, pt, kl: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, h, j, pt, kl: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, h, j, pt, kl: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, pt, kl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, j, pt, kl: (b, h, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, h, j, pt, kl: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KH, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32), qt,
+      k_pages, v_pages)
+    return (out.reshape(B, 1, H, Dh), m.reshape(B, 1, KH, G),
+            l.reshape(B, 1, KH, G))
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             causal, window, q_offset, scale, bq, bkv, nkv, sq, skv):
     iq = pl.program_id(2)

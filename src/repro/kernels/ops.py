@@ -11,7 +11,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels import wire_pack
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           gather_kv_pages,
+                                           paged_decode_attention_pallas)
 from repro.kernels.ssd_scan import ssd_pallas
 from repro.kernels.topk_compress import topk_compress_pallas
 
@@ -55,6 +57,44 @@ def decode_attention_combine(q, out_old, m_old, l_old, k_new, v_new, *,
                              softmax_scale=None):
     return ref.decode_attention_combine(q, out_old, m_old, l_old, k_new,
                                         v_new, softmax_scale=softmax_scale)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, *,
+                           k_scale=None, v_scale=None, contiguous=False,
+                           softmax_scale=None, impl=None):
+    """Decode attention over the paged KV pool (DESIGN.md §Serving
+    contract).  Always returns (out, m, l) stats so the caller folds the
+    current token's (k, v) in with ``decode_attention_combine`` — the
+    page write stays write-only (in place under XLA), same as the dense
+    decode path.
+
+    q: (B, 1, H, Dh); k_pages/v_pages: (NP, ps, KH, Dh); page_table:
+    (B, P); kv_len: (B,).  ``k_scale``/``v_scale`` (NP, ps, KH) f32
+    activate the int8 block-scaled KV mode (pages hold int8 values,
+    dequantized after the gather — the same value/scale split as the
+    int8 wire format).  ``contiguous=True`` takes the dense fallback in
+    ``gather_kv_pages`` (reshape, no gather) — bit-for-bit identical.
+
+    The Pallas path (TPU, or forced via impl="pallas") DMAs pages
+    straight from HBM via scalar-prefetched page-table indices; the jnp
+    path gathers then runs the flash-decode reference — bitwise equal to
+    the dense-cache decode on equal-sized caches.
+    """
+    r = _route(impl)
+    if r == "pallas" and k_scale is None and not contiguous:
+        return paged_decode_attention_pallas(
+            q, k_pages, v_pages, page_table, kv_len,
+            softmax_scale=softmax_scale, interpret=_interp())
+    k = gather_kv_pages(k_pages, page_table, contiguous=contiguous)
+    v = gather_kv_pages(v_pages, page_table, contiguous=contiguous)
+    if k_scale is not None:
+        ks = gather_kv_pages(k_scale, page_table, contiguous=contiguous)
+        vs = gather_kv_pages(v_scale, page_table, contiguous=contiguous)
+        k = (k.astype(jnp.float32) * (ks / 127.0)[..., None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * (vs / 127.0)[..., None]).astype(q.dtype)
+    return ref.decode_attention_jnp(q, k, v, kv_len=kv_len,
+                                    softmax_scale=softmax_scale,
+                                    return_stats=True)
 
 
 def ssd(x, dt, A, B, C, *, chunk=64, impl=None):

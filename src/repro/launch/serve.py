@@ -3,8 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --smoke \
         --batch 4 --new-tokens 16
 
---mesh single/multi builds the production mesh + serve policy (TPU target;
-the AOT compile path of the same functions is exercised by launch/dryrun.py).
+--continuous switches to the production path (continuous batching over
+the paged KV cache, per-request prompt/output lengths served from a
+Poisson request stream; attention-family archs only); --kv-dtype int8
+stores the paged cache block-quantized.  --mesh single/multi builds the
+production mesh + serve policy (TPU target; the AOT compile path of the
+same functions is exercised by launch/dryrun.py).
 """
 from __future__ import annotations
 
@@ -18,7 +22,32 @@ from repro.configs import ARCH_IDS, get_config, smoke_model
 from repro.dist.policies import make_serve_policy
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.models.registry import get_model
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving.engine import Engine, PagedConfig, ServeConfig
+from repro.serving.scheduler import Request
+
+
+def _serve_continuous(engine, args, vocab):
+    """Synthetic Poisson stream through Engine.serve."""
+    rng = np.random.default_rng(0)
+    t, reqs = 0.0, []
+    for rid in range(args.requests):
+        t += rng.exponential(1.0 / args.rate)
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        reqs.append(Request(
+            rid=rid, prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, args.new_tokens + 1)),
+            arrival=t))
+    t0 = time.time()
+    outs = engine.serve(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(o.tokens) for o in outs.values())
+    print(f"continuous: {len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s on this backend, "
+          f"kv_dtype={args.kv_dtype or 'dense'})")
+    for rid in sorted(outs)[:4]:
+        o = outs[rid]
+        print(f"  req{rid}: ttft={o.ttft*1e3:.1f}ms "
+              f"tokens={o.tokens[:8]}{'...' if len(o.tokens) > 8 else ''}")
 
 
 def main():
@@ -32,6 +61,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV cache")
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "int8"],
+                    help="paged KV storage dtype (--continuous only)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="stream length for --continuous")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate (req/s) for --continuous")
     args = ap.parse_args()
 
     bundle = get_config(args.arch)
@@ -47,7 +85,13 @@ def main():
     engine = Engine(cfg, params, max_len=args.prompt_len + args.new_tokens,
                     batch_size=args.batch, policy=policy,
                     serve=ServeConfig(max_new_tokens=args.new_tokens,
-                                      temperature=args.temperature))
+                                      temperature=args.temperature),
+                    paged=PagedConfig(page_size=args.page_size,
+                                      max_slots=args.batch,
+                                      kv_dtype=args.kv_dtype))
+    if args.continuous:
+        _serve_continuous(engine, args, cfg.vocab_size)
+        return
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len)).astype(np.int32)

@@ -74,3 +74,26 @@ def mask_padded_logits(cfg, logits):
         return logits
     pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
     return jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# int8 block-scaled KV quantization (DESIGN.md §Serving contract)
+# ---------------------------------------------------------------------------
+# Same scheme as the int8 wire format (dist/collectives.wire_encode): one
+# f32 scale per block of values, q = round(x / scale * 127).  The KV block
+# is a (token, head) head_dim vector — the natural unit both the paged
+# write (one token's K/V per head) and the attention gather touch, and
+# small enough that |err| <= max|x_block| / 254 per element keeps the
+# logit error bounded (tests/test_serving.py pins the bound).
+
+def kv_quantize_int8(x):
+    """x: (..., Dh) -> (q int8 (..., Dh), scale f32 (...,))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1)
+    q = jnp.round(xf / jnp.maximum(scale, 1e-30)[..., None] * 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequantize_int8(q, scale, dtype):
+    """Inverse of ``kv_quantize_int8`` into ``dtype``."""
+    return (q.astype(jnp.float32) * (scale / 127.0)[..., None]).astype(dtype)

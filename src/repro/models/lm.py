@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models.common import (constrain, cross_entropy, dense_init,
-                                 dtype_of, rms_norm, rope, softcap, split_keys)
+                                 dtype_of, kv_quantize_int8, rms_norm, rope,
+                                 softcap, split_keys)
 
 
 # ---------------------------------------------------------------------------
@@ -397,6 +398,170 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
         cache["xk"] = jnp.zeros((L, batch_size, enc_len, KH, Dh), cd)
         cache["xv"] = jnp.zeros((L, batch_size, enc_len, KH, Dh), cd)
     return cache
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     kv_dtype: str = None):
+    """Paged KV pool (DESIGN.md §Serving contract): one (L, num_pages,
+    page_size, KH, Dh) buffer per K/V, page 0 reserved as the null page.
+    ``kv_dtype="int8"`` stores block-scaled int8 values plus one f32
+    scale per (page, position, head) head_dim block."""
+    L, KH, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cd = dtype_of(cfg.compute_dtype)
+    if kv_dtype not in (None, "int8"):
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in (None, 'int8')")
+    vd = jnp.int8 if kv_dtype == "int8" else cd
+    cache = {
+        "k": jnp.zeros((L, num_pages, page_size, KH, Dh), vd),
+        "v": jnp.zeros((L, num_pages, page_size, KH, Dh), vd),
+    }
+    if kv_dtype == "int8":
+        cache["k_scale"] = jnp.zeros((L, num_pages, page_size, KH),
+                                     jnp.float32)
+        cache["v_scale"] = jnp.zeros((L, num_pages, page_size, KH),
+                                     jnp.float32)
+    return cache
+
+
+def prefill_paged(cfg: ModelConfig, params, batch, cache, page_table,
+                  prompt_len, policy=None):
+    """Prompt prefill writing KV through the page table.
+
+    batch["tokens"]: (B, S_pad) right-padded prompts with S_pad a
+    multiple of the page size; page_table: (B, P) physical page ids;
+    prompt_len: (B,) true prompt lengths.  Returns (logits at position
+    prompt_len-1 per row (B, 1, V), updated cache).
+
+    Positions >= prompt_len hold pad garbage in the written pages: reads
+    are masked by kv_len and decode overwrites them position-by-position
+    as the request grows, so they are never observed (§Serving contract).
+    """
+    pol = policy
+    quant = "k_scale" in cache
+    x = _embed(cfg, params, batch, pol)
+    B, S, D = x.shape
+    ps = cache["k"].shape[2]
+    assert S % ps == 0, (S, ps)
+    positions = jnp.arange(S)
+
+    def body(carry, w):
+        (x, positions) = carry
+        h = rms_norm(x, w["ln1"], cfg.norm_eps)
+        attn_out, (k_new, v_new) = _attention(
+            cfg, h, w, pol, positions, causal=True, window=cfg.window)
+        x = x + attn_out
+        h = rms_norm(x, w["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            x = x + _moe_ffn(cfg, h, w, pol)
+        else:
+            x = x + _dense_ffn(cfg, h, w, pol)
+        return (constrain(pol, x, "residual"), positions), (k_new, v_new)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, _), (k_st, v_st) = jax.lax.scan(body, (x, positions),
+                                        params["layers"])
+    idx = (prompt_len - 1).astype(jnp.int32)[:, None, None]
+    logits = _logits(cfg, params, jnp.take_along_axis(x, idx, axis=1), pol)
+
+    # scatter the prompt's pages into the pool (whole pages at a time)
+    L = cfg.num_layers
+    Pp = S // ps
+    KH, Dh = cfg.num_kv_heads, cfg.head_dim
+    phys = page_table[:, :Pp]  # (B, Pp)
+    out = dict(cache)
+    kc = k_st.reshape(L, B, Pp, ps, KH, Dh)
+    vc = v_st.reshape(L, B, Pp, ps, KH, Dh)
+    if quant:
+        kq, ks = kv_quantize_int8(kc)
+        vq, vs = kv_quantize_int8(vc)
+        out["k"] = cache["k"].at[:, phys].set(kq)
+        out["v"] = cache["v"].at[:, phys].set(vq)
+        out["k_scale"] = cache["k_scale"].at[:, phys].set(ks)
+        out["v_scale"] = cache["v_scale"].at[:, phys].set(vs)
+    else:
+        out["k"] = cache["k"].at[:, phys].set(kc.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, phys].set(vc.astype(cache["v"].dtype))
+    return logits, out
+
+
+def decode_step_paged(cfg: ModelConfig, params, cache, tokens, page_table,
+                      kv_len, policy=None, contiguous=False):
+    """One-token decode through the page table. tokens: (B, 1); kv_len:
+    (B,) per-request lengths (0 for empty decode slots — their reads are
+    fully masked and their writes land on the null page).  Returns
+    (logits (B, 1, V), cache).
+
+    Same pre-update-attend + analytic-combine structure as the dense
+    ``decode_step`` (the page write stays write-only => in place under
+    XLA), but positions, rope and the cache view are per-request, so any
+    mix of requests at different lengths decodes in one batch.
+    """
+    pol = policy
+    B = tokens.shape[0]
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = cfg.num_layers
+    cd = dtype_of(cfg.compute_dtype)
+    quant = "k_scale" in cache
+    ps = cache["k"].shape[2]
+    kv_len = kv_len.astype(jnp.int32)
+    positions = kv_len[:, None]  # (B, 1) per-request rope positions
+    x = params["emb"][tokens].astype(cd)
+    pj = kv_len // ps
+    phys = jnp.take_along_axis(page_table, pj[:, None], axis=1)[:, 0]
+    off = kv_len % ps
+
+    def body(l, carry):
+        x, c = carry
+        w = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False),
+            params["layers"])
+        h = rms_norm(x, w["ln1"], cfg.norm_eps)
+        q = (h @ w["wq"]).astype(cd)
+        k = (h @ w["wk"]).astype(cd)
+        v = (h @ w["wv"]).astype(cd)
+        if cfg.qkv_bias:
+            q, k, v = q + w["bq"].astype(cd), k + w["bk"].astype(cd), \
+                v + w["bv"].astype(cd)
+        q = rope(q.reshape(B, 1, H, Dh), positions, cfg.rope_theta)
+        k = rope(k.reshape(B, 1, KH, Dh), positions, cfg.rope_theta)
+        v = v.reshape(B, 1, KH, Dh)
+        kp = jax.lax.dynamic_index_in_dim(c["k"], l, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(c["v"], l, 0, keepdims=False)
+        scales = {}
+        if quant:
+            scales = dict(
+                k_scale=jax.lax.dynamic_index_in_dim(c["k_scale"], l, 0,
+                                                     keepdims=False),
+                v_scale=jax.lax.dynamic_index_in_dim(c["v_scale"], l, 0,
+                                                     keepdims=False))
+        o_old, m_old, l_old = ops.paged_decode_attention(
+            q, kp, vp, page_table, kv_len, contiguous=contiguous, **scales)
+        o = ops.decode_attention_combine(q, o_old, m_old, l_old, k, v)
+        c = dict(c)
+        if quant:
+            kq, ks = kv_quantize_int8(k[:, 0])
+            vq, vs = kv_quantize_int8(v[:, 0])
+            c["k"] = c["k"].at[l, phys, off].set(kq)
+            c["v"] = c["v"].at[l, phys, off].set(vq)
+            c["k_scale"] = c["k_scale"].at[l, phys, off].set(ks)
+            c["v_scale"] = c["v_scale"].at[l, phys, off].set(vs)
+        else:
+            c["k"] = c["k"].at[l, phys, off].set(
+                k[:, 0].astype(c["k"].dtype))
+            c["v"] = c["v"].at[l, phys, off].set(
+                v[:, 0].astype(c["v"].dtype))
+        x = x + o.reshape(B, 1, H * Dh) @ w["wo"]
+        h = rms_norm(x, w["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            x = x + _moe_ffn(cfg, h, w, pol)
+        else:
+            x = x + _dense_ffn(cfg, h, w, pol)
+        return (x, c)
+
+    x, out = jax.lax.fori_loop(0, L, body, (x, dict(cache)))
+    logits = _logits(cfg, params, x, pol)
+    return logits, out
 
 
 def prefill(cfg: ModelConfig, params, batch, cache, policy=None):

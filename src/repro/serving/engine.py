@@ -1,16 +1,33 @@
-"""Batched serving engine: prefill + decode over the production mesh.
+"""Serving engine: continuous batching over a paged KV cache.
 
-Static-batch continuous serving: requests are padded into a fixed (B, S)
-prompt block, prefilled once, then decoded token-by-token with the
-sequence-sharded KV cache (flash-decode pattern, DESIGN.md §3).  Per-request
-EOS handling + greedy/temperature sampling.  On CPU this serves the smoke
-configs; on a real pod the same jitted functions run unchanged.
+Two paths (DESIGN.md §Serving contract):
+
+  * ``Engine.serve(requests)`` — the production path.  A ``Scheduler``
+    admits requests from a queue into a fixed set of decode slots
+    (per-decode-step admit/retire: a finished request's pages are
+    released and its slot refilled by a waiting prefill the same step),
+    KV lives in a paged pool (``serving/page_manager``) read through
+    per-request page tables (``models.lm.decode_step_paged``), and an
+    optional int8 block-scaled KV mode stores the cache at ~1/4 the
+    dense-f32 bytes.  Per-request prompt lengths and ``max_new_tokens``
+    are first-class.
+  * ``Engine.generate(prompts)`` — the legacy static-batch path (dense
+    contiguous cache, one shared ``pos``), kept for parity pins and as
+    the measured baseline.  Partial batches are padded with masked dummy
+    rows; rows that hit EOS stop being sampled/emitted (post-EOS
+    positions hold ``pad_id``) while the rest of the batch drains.
+
+Sampling is deterministic per request: token t of request rid draws from
+``fold_in(fold_in(key(seed), rid), t)``, so outputs do not depend on
+batch composition or admission order (pinned in tests/test_serving.py).
+``eos_id=-1`` is the explicit never-stops-early sentinel.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from dataclasses import dataclass
-from typing import List, Optional
+from functools import partial
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,42 +35,119 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_model
+from repro.serving.page_manager import PageManager, pages_for
+from repro.serving.scheduler import Request, RequestOutput, Scheduler
+
+PAGED_FAMILIES = ("dense", "moe")  # families with a self-attention KV cache
 
 
 @dataclass
 class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 => greedy
-    eos_id: int = -1  # -1 => never stops early
+    eos_id: int = -1  # -1 => explicit "never stops early" sentinel
+    pad_id: int = 0   # emitted for already-finished rows (legacy path)
     seed: int = 0
+
+
+@dataclass
+class PagedConfig:
+    """Continuous-batching knobs. ``num_pages=0`` sizes the pool to the
+    full worst case (max_slots concurrent requests at their whole
+    prompt+max_new budget) + the null page; smaller pools make admission
+    wait for pages instead."""
+    page_size: int = 16
+    num_pages: int = 0
+    max_slots: int = 8
+    kv_dtype: Optional[str] = None  # None => compute dtype; "int8" quantized
+    contiguous: bool = False  # static identity page layout (dense fallback)
+
+
+def _align(n: int, m: int) -> int:
+    return -(-int(n) // int(m)) * int(m)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
-                 batch_size: int, policy=None, serve: ServeConfig = None):
+                 batch_size: int, policy=None, serve: ServeConfig = None,
+                 paged: PagedConfig = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
         self.policy = policy
-        self.serve = serve or ServeConfig()
+        self.serve_cfg = serve or ServeConfig()
+        self.paged = paged or PagedConfig()
         self.max_len = max_len
         self.batch_size = batch_size
         self._prefill = jax.jit(
             lambda p, b, c: self.model.prefill(cfg, p, b, c, policy))
         self._decode = jax.jit(
             lambda p, c, t: self.model.decode_step(cfg, p, c, t, policy))
+        # paged-path programs are built lazily (lm-family only)
+        self._paged_prefill = None
+        self._paged_decode = None
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
 
     def _sample(self, logits, key):
         logits = logits[:, -1, :]
-        if self.serve.temperature <= 0:
+        if self.serve_cfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / self.serve.temperature)
+        return jax.random.categorical(key, logits / self.serve_cfg.temperature)
+
+    def _request_keys(self, rids, tok_idx):
+        """Per-(request, token) PRNG keys — independent of batching."""
+        base = jax.random.PRNGKey(self.serve_cfg.seed)
+        return jax.vmap(
+            lambda r, t: jax.random.fold_in(jax.random.fold_in(base, r), t)
+        )(jnp.asarray(rids, jnp.uint32), jnp.asarray(tok_idx, jnp.uint32))
+
+    def _sample_rows(self, logits, rids, tok_idx):
+        """logits (B, 1, V) -> tokens (B,), per-request deterministic."""
+        lg = logits[:, -1, :]
+        if self.serve_cfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        keys = self._request_keys(rids, tok_idx)
+        return jax.vmap(jax.random.categorical)(
+            keys, lg / self.serve_cfg.temperature).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # legacy static-batch path
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: np.ndarray,
                  extra_inputs: Optional[dict] = None) -> np.ndarray:
-        """prompts: (B, S_prompt) int32. Returns (B, max_new_tokens)."""
+        """prompts: (B, S_prompt) int32, any B >= 1. Returns
+        (B, max_new_tokens); rows finish at EOS and hold ``pad_id``
+        afterwards.  B < batch_size is padded with masked dummy rows;
+        B > batch_size is served in consecutive chunks."""
+        B = prompts.shape[0]
+        bs = self.batch_size
+        if B > bs:
+            outs = [self.generate(prompts[i:i + bs],
+                                  None if extra_inputs is None else
+                                  {k: v[i:i + bs]
+                                   for k, v in extra_inputs.items()})
+                    for i in range(0, B, bs)]
+            return np.concatenate(outs, axis=0)
+        pad_rows = bs - B
+        if pad_rows:
+            prompts = np.concatenate(
+                [prompts, np.repeat(prompts[-1:], pad_rows, axis=0)], axis=0)
+            if extra_inputs:
+                extra_inputs = {
+                    k: np.concatenate(
+                        [v, np.repeat(v[-1:], pad_rows, axis=0)], axis=0)
+                    for k, v in extra_inputs.items()}
+        out = self._generate_full(prompts, extra_inputs)
+        return out[:B]
+
+    def _generate_full(self, prompts, extra_inputs):
         B, S = prompts.shape
         assert B == self.batch_size
+        sc = self.serve_cfg
         cache = self.model.init_cache(
             self.cfg, B, self.max_len,
             enc_len=S if self.cfg.family == "encdec" else 0)
@@ -61,16 +155,136 @@ class Engine:
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
         logits, cache = self._prefill(self.params, batch, cache)
-        key = jax.random.PRNGKey(self.serve.seed)
+        key = jax.random.PRNGKey(sc.seed)
         out = []
         done = np.zeros(B, bool)
         tok = self._sample(logits, key)
-        for i in range(self.serve.max_new_tokens):
-            out.append(np.asarray(tok))
-            done |= np.asarray(tok) == self.serve.eos_id
-            if done.all():
+        pad = np.full(B, sc.pad_id, np.int64)
+        for _ in range(sc.max_new_tokens):
+            tok_np = np.asarray(tok)
+            emit = np.where(done, pad, tok_np)  # done rows emit pad only
+            out.append(emit)
+            # eos_id=-1 sentinel: no token id is negative => never done
+            done |= (sc.eos_id >= 0) & (tok_np == sc.eos_id)
+            if done.all() or len(out) == sc.max_new_tokens:
                 break
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache, tok[:, None])
             tok = self._sample(logits, sub)
-        return np.stack(out, axis=1)
+        res = np.stack(out, axis=1)
+        if res.shape[1] < sc.max_new_tokens:  # early exit: pad to contract
+            fill = np.full((B, sc.max_new_tokens - res.shape[1]), sc.pad_id,
+                           res.dtype)
+            res = np.concatenate([res, fill], axis=1)
+        return res
+
+    # ------------------------------------------------------------------
+    # continuous-batching path
+    # ------------------------------------------------------------------
+
+    def _build_paged_programs(self, S_pad: int):
+        cfg, policy = self.cfg, self.policy
+        if cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"continuous batching needs a KV-cache family "
+                f"{PAGED_FAMILIES}, got {cfg.family!r}")
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def prefill_one(params, cache, tokens, pt_row, prompt_len, rid):
+            logits, cache = self.model.prefill_paged(
+                cfg, params, {"tokens": tokens}, cache, pt_row, prompt_len,
+                policy)
+            tok = self._sample_rows(logits, rid, jnp.zeros_like(rid))
+            return tok, cache
+
+        contiguous = self.paged.contiguous
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode_all(params, cache, tokens, table, kv_len, rids, tok_idx):
+            logits, cache = self.model.decode_step_paged(
+                cfg, params, cache, tokens, table, kv_len, policy,
+                contiguous=contiguous)
+            tok = self._sample_rows(logits, rids, tok_idx)
+            return tok, cache
+
+        self._paged_prefill = prefill_one
+        self._paged_decode = decode_all
+
+    def serve(self, requests: Sequence[Request],
+              clock=time.perf_counter) -> Dict[int, RequestOutput]:
+        """Continuous batching: admit/retire per decode step.
+
+        ``requests`` carry per-request prompts (any lengths), per-request
+        ``max_new_tokens`` and arrival times (seconds, relative to the
+        call).  Returns {rid: RequestOutput} with tokens + TTFT/TPOT
+        timestamps against the same clock.
+        """
+        pc = self.paged
+        sc = self.serve_cfg
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        if not reqs:
+            return {}
+        S_pad = _align(max(len(r.prompt) for r in reqs), pc.page_size)
+        budget = S_pad + max(r.max_new_tokens for r in reqs)
+        width = pages_for(budget, pc.page_size)
+        num_pages = pc.num_pages or 1 + pc.max_slots * width
+        if width > num_pages - 1:
+            raise ValueError(
+                f"a request's worst-case footprint ({width} pages) exceeds "
+                f"the pool ({num_pages - 1} allocatable pages)")
+        pm = PageManager(num_pages, pc.page_size)
+        sched = Scheduler(max_slots=pc.max_slots, page_manager=pm,
+                          table_width=width, clock=clock)
+        for r in reqs:
+            sched.submit(r)
+        if self._paged_prefill is None:
+            self._build_paged_programs(S_pad)
+        cache = self.model.init_paged_cache(self.cfg, num_pages, pc.page_size,
+                                            kv_dtype=pc.kv_dtype)
+
+        t0 = clock()
+        now = lambda: clock() - t0  # noqa: E731 — engine-relative clock
+        slot_rid = np.zeros(pc.max_slots, np.int32)
+        slot_tok = np.full(pc.max_slots, sc.pad_id, np.int32)
+        while sched.has_work:
+            admitted = sched.admit(now())
+            for i in admitted:
+                slot = sched.slots[i]
+                req = slot.request
+                toks = np.full((1, S_pad), sc.pad_id, np.int32)
+                toks[0, :len(req.prompt)] = req.prompt
+                pt_row = pm.table_row(req.rid, width)[None]
+                tok, cache = self._paged_prefill(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(pt_row),
+                    jnp.asarray([len(req.prompt)], np.int32),
+                    jnp.asarray([req.rid], np.int32))
+                slot_rid[i] = req.rid
+                slot_tok[i] = int(tok[0])
+                sched.record_token(i, slot_tok[i], sc.eos_id, now())
+            if sched.num_active == 0:
+                if sched.waiting:  # idle until the next arrival
+                    wait = sched.waiting[0].arrival - now()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.01))
+                    continue
+                break
+            table = sched.table()
+            kv_len = sched.kv_lens()
+            tok_idx = np.array(
+                [0 if s is None else s.produced for s in sched.slots],
+                np.int32)
+            tok, cache = self._paged_decode(
+                self.params, cache, jnp.asarray(slot_tok[:, None]),
+                jnp.asarray(table), jnp.asarray(kv_len),
+                jnp.asarray(slot_rid), jnp.asarray(tok_idx))
+            tok_np = np.asarray(tok)
+            t = now()
+            for i, s in enumerate(sched.slots):
+                if s is None:
+                    continue
+                if sched.record_token(i, tok_np[i], sc.eos_id, t):
+                    slot_tok[i] = tok_np[i]
+        pm.check_invariants()
+        assert pm.live_requests == 0, "pages leaked past retirement"
+        return sched.finished

@@ -1,0 +1,412 @@
+"""Serving-path contract tests (DESIGN.md §Serving contract).
+
+Pins: page-manager accounting (no leaks, all-or-nothing OOM), scheduler
+admit/retire rules, paged-vs-dense BIT-FOR-BIT decode parity on
+contiguous pages (and the reshape fallback vs the gather), the Pallas
+paged-attention kernel vs the jnp path, int8-KV byte savings + bounded
+logit error, EOS early-exit, and per-request deterministic sampling
+independent of batch composition.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_model
+from repro.kernels import ops
+from repro.models import lm
+from repro.models.common import kv_dequantize_int8, kv_quantize_int8
+from repro.models.registry import get_model
+from repro.serving.engine import Engine, PagedConfig, ServeConfig
+from repro.serving.page_manager import (NULL_PAGE, PageError, PageManager,
+                                        pages_for)
+from repro.serving.scheduler import Request, Scheduler
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = smoke_model(get_config("smollm_135m").model)
+    model = get_model(cfg)
+    params = model.init(cfg, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(cfg, params, *, batch=4, max_new=8, temperature=0.0, eos=-1,
+            kv_dtype=None, page_size=8, seed=0):
+    return Engine(cfg, params, max_len=32, batch_size=batch,
+                  serve=ServeConfig(max_new_tokens=max_new,
+                                    temperature=temperature, eos_id=eos,
+                                    seed=seed),
+                  paged=PagedConfig(page_size=page_size, max_slots=batch,
+                                    kv_dtype=kv_dtype))
+
+
+def _reqs(cfg, spec, seed=0):
+    """spec: [(rid, prompt_len, max_new), ...] -> deterministic requests."""
+    out = []
+    for rid, plen, mnt in spec:
+        rng = np.random.default_rng(seed + rid)  # prompt depends on rid only
+        out.append(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab_size, plen)
+                           .astype(np.int32),
+                           max_new_tokens=mnt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# page manager
+# ---------------------------------------------------------------------------
+
+class TestPageManager:
+    def test_alloc_release_no_leaks(self):
+        pm = PageManager(num_pages=9, page_size=8)
+        a = pm.alloc(1, 20)           # 3 pages
+        b = pm.alloc(2, 8)            # 1 page
+        assert len(a) == 3 and len(b) == 1
+        assert NULL_PAGE not in a + b
+        assert pm.free_pages == 8 - 4
+        pm.check_invariants()
+        pm.release(1)
+        pm.release(2)
+        assert pm.free_pages == 8 and pm.live_requests == 0
+        pm.check_invariants()
+
+    def test_oom_is_all_or_nothing(self):
+        pm = PageManager(num_pages=5, page_size=8)  # 4 allocatable
+        pm.alloc(1, 24)               # 3 pages
+        free_before = pm.free_pages
+        with pytest.raises(PageError):
+            pm.alloc(2, 16)           # needs 2, only 1 free
+        assert pm.free_pages == free_before  # free list untouched
+        assert pm.live_requests == 1
+        pm.check_invariants()
+
+    def test_extend_all_or_nothing(self):
+        pm = PageManager(num_pages=5, page_size=8)
+        pm.alloc(1, 8)
+        assert pm.extend(1, 8) == []          # already covered
+        assert len(pm.extend(1, 17)) == 2     # 1 -> 3 pages
+        with pytest.raises(PageError):
+            pm.extend(1, 100)
+        assert len(pm.pages_of(1)) == 3       # unchanged after failure
+        pm.check_invariants()
+
+    def test_table_row_null_padded(self):
+        pm = PageManager(num_pages=9, page_size=8)
+        pm.alloc(7, 10)               # 2 pages
+        row = pm.table_row(7, 5)
+        assert row.dtype == np.int32 and row.shape == (5,)
+        assert list(row[2:]) == [NULL_PAGE] * 3
+        assert list(row[:2]) == pm.pages_of(7)
+        with pytest.raises(ValueError):
+            pm.table_row(7, 1)        # narrower than owned pages
+
+    def test_null_page_reserved(self):
+        pm = PageManager(num_pages=9, page_size=8)
+        got = [p for r in range(4) for p in pm.alloc(r, 16)]
+        assert NULL_PAGE not in got and sorted(got) == list(range(1, 9))
+        with pytest.raises(ValueError):
+            PageManager(num_pages=1, page_size=8)
+
+    def test_pages_for(self):
+        assert pages_for(1, 8) == 1
+        assert pages_for(8, 8) == 1
+        assert pages_for(9, 8) == 2
+        assert pages_for(0, 8) == 1   # every request holds >= 1 page
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def _sched(self, *, slots=2, num_pages=9, ps=8, width=4):
+        pm = PageManager(num_pages, ps)
+        return Scheduler(max_slots=slots, page_manager=pm, table_width=width,
+                         clock=lambda: 0.0), pm
+
+    def test_admit_full_reservation_fifo(self):
+        sched, pm = self._sched(slots=2, num_pages=9)  # 8 pages
+        # head needs 4 pages (24+8=32 tokens); second would fit in 1 but
+        # must NOT jump the queue once the head blocks
+        sched.submit(Request(rid=0, prompt=np.zeros(24, np.int32),
+                             max_new_tokens=8))
+        sched.submit(Request(rid=1, prompt=np.zeros(24, np.int32),
+                             max_new_tokens=8))
+        sched.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=2))
+        assert sched.admit(0.0) == [0, 1]     # 2x4 pages reserved
+        assert pm.free_pages == 0
+        assert sched.admit(0.0) == []         # no slot AND no pages
+        # retiring rid=0 frees its slot + pages -> rid=2 admitted
+        for _ in range(8):
+            live = sched.record_token(0, 5, -1, now=0.0)
+        assert not live and sched.finished[0].finish_reason == "length"
+        assert sched.admit(0.0) == [0]
+        assert sched.slots[0].request.rid == 2
+
+    def test_eos_retires_and_releases(self):
+        sched, pm = self._sched()
+        sched.submit(Request(rid=3, prompt=np.zeros(8, np.int32),
+                             max_new_tokens=8))
+        sched.admit(0.0)
+        assert sched.record_token(0, 41, eos_id=99, now=0.0)
+        assert not sched.record_token(0, 99, eos_id=99, now=0.0)
+        out = sched.finished[3]
+        assert out.finish_reason == "eos" and out.tokens == [41, 99]
+        assert pm.live_requests == 0
+        pm.check_invariants()
+
+    def test_table_and_kv_lens_mask_empty_slots(self):
+        sched, pm = self._sched(slots=3)
+        sched.submit(Request(rid=0, prompt=np.zeros(10, np.int32),
+                             max_new_tokens=4))
+        sched.admit(0.0)
+        t, kl = sched.table(), sched.kv_lens()
+        assert t.shape == (3, 4) and kl.tolist() == [10, 0, 0]
+        assert (t[1:] == NULL_PAGE).all()
+
+    def test_arrival_gating(self):
+        sched, _ = self._sched()
+        sched.submit(Request(rid=0, prompt=np.zeros(8, np.int32),
+                             max_new_tokens=2, arrival=5.0))
+        assert sched.admit(1.0) == []
+        assert sched.admit(5.0) == [0]
+
+
+# ---------------------------------------------------------------------------
+# paged vs dense: bit-for-bit decode parity
+# ---------------------------------------------------------------------------
+
+class TestPagedParity:
+    PS, P, B, S = 8, 4, 2, 16  # P * PS == dense max_len == 32
+
+    def _identity_table(self):
+        # slot b owns pages [1 + b*P, 1 + (b+1)*P): the contiguous layout
+        return np.arange(1, 1 + self.B * self.P, dtype=np.int32).reshape(
+            self.B, self.P)
+
+    def _run_paged(self, smol, contiguous):
+        cfg, model, params = smol
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, cfg.vocab_size, (self.B, self.S)).astype(
+            np.int32)
+        table = jnp.asarray(self._identity_table())
+        cache = lm.init_paged_cache(cfg, 1 + self.B * self.P, self.PS)
+        plen = jnp.full((self.B,), self.S, jnp.int32)
+        logits, cache = lm.prefill_paged(cfg, params, {"tokens": toks},
+                                         cache, table, plen)
+        outs = [np.asarray(logits)]
+        kv_len = plen
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for _ in range(5):
+            logits, cache = lm.decode_step_paged(
+                cfg, params, cache, tok[:, None], table, kv_len,
+                contiguous=contiguous)
+            outs.append(np.asarray(logits))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            kv_len = kv_len + 1
+        return toks, outs
+
+    def test_paged_matches_dense_bitwise(self, smol):
+        cfg, model, params = smol
+        toks, paged = self._run_paged(smol, contiguous=False)
+        cache = lm.init_cache(cfg, self.B, self.P * self.PS)
+        logits, cache = lm.prefill(cfg, params, {"tokens": jnp.asarray(toks)},
+                                   cache)
+        dense = [np.asarray(logits[:, -1:])]
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for _ in range(5):
+            logits, cache = lm.decode_step(cfg, params, cache, tok[:, None])
+            dense.append(np.asarray(logits))
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for step, (p, d) in enumerate(zip(paged, dense)):
+            assert np.array_equal(p, d), f"step {step}: paged != dense"
+
+    def test_contiguous_fallback_matches_gather_bitwise(self, smol):
+        _, gather = self._run_paged(smol, contiguous=False)
+        _, dense_fb = self._run_paged(smol, contiguous=True)
+        for step, (a, b) in enumerate(zip(gather, dense_fb)):
+            assert np.array_equal(a, b), f"step {step}: fallback != gather"
+
+
+# ---------------------------------------------------------------------------
+# pallas paged-attention kernel vs jnp gather path
+# ---------------------------------------------------------------------------
+
+def test_paged_attention_pallas_matches_jnp(rng):
+    B, P, ps, KH, G, Dh = 3, 4, 8, 2, 2, 16
+    H = KH * G
+    NP = 1 + B * P
+    q = jnp.asarray(rng.normal(0, 1, (B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (NP, ps, KH, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (NP, ps, KH, Dh)), jnp.float32)
+    # non-trivial permuted tables + ragged lengths
+    perm = rng.permutation(np.arange(1, NP)).astype(np.int32)
+    table = jnp.asarray(perm.reshape(B, P))
+    kv_len = jnp.asarray([5, 17, 32], jnp.int32)
+    o_p, m_p, l_p = ops.paged_decode_attention(q, k, v, table, kv_len,
+                                               impl="pallas")
+    o_j, m_j, l_j = ops.paged_decode_attention(q, k, v, table, kv_len,
+                                               impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_j), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_j), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_j), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 block-scaled KV
+# ---------------------------------------------------------------------------
+
+class TestInt8KV:
+    def test_quantize_error_bound(self, rng):
+        x = jnp.asarray(rng.normal(0, 3, (64, 4, 16)), jnp.float32)
+        q, scale = kv_quantize_int8(x)
+        assert q.dtype == jnp.int8 and scale.shape == (64, 4)
+        deq = kv_dequantize_int8(q, scale, jnp.float32)
+        # |err| <= (scale/127)/2 per element, scale = max|x| per block
+        bound = np.asarray(scale)[..., None] / 254.0 + 1e-6
+        assert (np.abs(np.asarray(deq - x)) <= bound).all()
+
+    def test_cache_bytes_ratio(self, smol):
+        cfg, _, _ = smol
+        dense = lm.init_paged_cache(cfg, 9, 8)
+        quant = lm.init_paged_cache(cfg, 9, 8, kv_dtype="int8")
+        db = sum(np.asarray(v).nbytes for v in dense.values())
+        qb = sum(np.asarray(v).nbytes for v in quant.values())
+        assert db / qb >= 3.0, f"int8 KV only {db/qb:.2f}x smaller"
+        with pytest.raises(ValueError):
+            lm.init_paged_cache(cfg, 9, 8, kv_dtype="fp8")
+
+    def test_bounded_logit_error(self, smol):
+        cfg, model, params = smol
+        t = TestPagedParity()
+        _, exact = t._run_paged(smol, contiguous=False)
+        # same trace, int8 pool
+        rng = np.random.default_rng(1)
+        toks = rng.integers(0, cfg.vocab_size, (t.B, t.S)).astype(np.int32)
+        table = jnp.asarray(t._identity_table())
+        cache = lm.init_paged_cache(cfg, 1 + t.B * t.P, t.PS,
+                                    kv_dtype="int8")
+        plen = jnp.full((t.B,), t.S, jnp.int32)
+        logits, cache = lm.prefill_paged(cfg, params, {"tokens": toks},
+                                         cache, table, plen)
+        err = [np.abs(np.asarray(logits) - exact[0]).max()]
+        kv_len, tok = plen, jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        for i in range(5):
+            logits, cache = lm.decode_step_paged(
+                cfg, params, cache, tok[:, None], table, kv_len)
+            err.append(np.abs(np.asarray(logits) - exact[i + 1]).max())
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            kv_len = kv_len + 1
+        assert max(err) < 1.0, f"int8-KV logit error {max(err):.3f}"
+
+
+# ---------------------------------------------------------------------------
+# engine: legacy static path
+# ---------------------------------------------------------------------------
+
+class TestEngineStatic:
+    def test_partial_and_oversized_batches(self, smol):
+        cfg, _, params = smol
+        eng = _engine(cfg, params, batch=4, max_new=6)
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+        full = eng.generate(prompts)
+        assert full.shape == (4, 6)
+        part = eng.generate(prompts[:3])          # padded with dummy rows
+        assert part.shape == (3, 6)
+        assert np.array_equal(part, full[:3])     # padding rows don't leak
+        big = eng.generate(np.concatenate([prompts, prompts])[:7])  # chunked
+        assert big.shape == (7, 6)
+        assert np.array_equal(big[:4], full)
+
+    def test_greedy_deterministic_temperature_seeded(self, smol):
+        cfg, _, params = smol
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+        g = _engine(cfg, params, batch=2, max_new=6)
+        assert np.array_equal(g.generate(prompts), g.generate(prompts))
+        t1 = _engine(cfg, params, batch=2, max_new=6, temperature=0.7)
+        t2 = _engine(cfg, params, batch=2, max_new=6, temperature=0.7)
+        assert np.array_equal(t1.generate(prompts), t2.generate(prompts))
+        assert not np.array_equal(g.generate(prompts), t1.generate(prompts))
+
+    def test_eos_early_exit_emits_pad(self, smol):
+        cfg, _, params = smol
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+        free = _engine(cfg, params, batch=2, max_new=8).generate(prompts)
+        eos = int(free[0, 2])  # token row 0 greedily emits at step 2
+        out = _engine(cfg, params, batch=2, max_new=8, eos=eos).generate(
+            prompts)
+        for r in range(2):
+            hits = np.nonzero(free[r] == eos)[0]
+            stop = int(hits[0]) if hits.size else None
+            if stop is None:
+                assert np.array_equal(out[r], free[r])
+            else:  # tokens up to and incl. EOS, pad_id afterwards
+                assert np.array_equal(out[r][:stop + 1], free[r][:stop + 1])
+                assert (out[r][stop + 1:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# engine: continuous path
+# ---------------------------------------------------------------------------
+
+class TestEngineContinuous:
+    def test_serve_matches_static_greedy(self, smol):
+        cfg, _, params = smol
+        eng = _engine(cfg, params, batch=2, max_new=6)
+        reqs = _reqs(cfg, [(0, 8, 6), (1, 8, 6)])
+        outs = eng.serve(reqs)
+        static = eng.generate(np.stack([r.prompt for r in reqs]))
+        for r in reqs:
+            assert outs[r.rid].tokens == static[r.rid].tolist()
+            assert outs[r.rid].finish_reason == "length"
+
+    def test_per_request_budgets_and_slot_refill(self, smol):
+        cfg, _, params = smol
+        eng = _engine(cfg, params, batch=2, max_new=8)
+        # 5 requests over 2 slots with mixed budgets: refill must happen
+        spec = [(i, 4 + 4 * (i % 2), 2 + 3 * (i % 3)) for i in range(5)]
+        outs = eng.serve(_reqs(cfg, spec))
+        assert sorted(outs) == [0, 1, 2, 3, 4]
+        for rid, _, mnt in spec:
+            assert len(outs[rid].tokens) == mnt
+
+    def test_sampling_independent_of_batch_composition(self, smol):
+        cfg, _, params = smol
+        spec_alone = [(7, 8, 5)]
+        spec_crowd = [(i, 8, 5) for i in range(6)] + spec_alone
+        eng = _engine(cfg, params, batch=4, max_new=8, temperature=0.7)
+        alone = eng.serve(_reqs(cfg, spec_alone))[7].tokens
+        crowd = eng.serve(_reqs(cfg, spec_crowd))[7].tokens
+        assert alone == crowd  # keyed by (rid, token_idx), not slot/batch
+
+    def test_serve_eos_stops_early(self, smol):
+        cfg, _, params = smol
+        eng = _engine(cfg, params, batch=2, max_new=8)
+        reqs = _reqs(cfg, [(0, 8, 8)])
+        free = eng.serve(reqs)[0].tokens
+        eos = free[2]
+        eng_eos = _engine(cfg, params, batch=2, max_new=8, eos=eos)
+        out = eng_eos.serve(_reqs(cfg, [(0, 8, 8)]))[0]
+        assert out.finish_reason == "eos"
+        stop = free.index(eos)  # stops at the FIRST occurrence of EOS
+        assert out.tokens == free[:stop + 1]
+
+    def test_int8_kv_serve_runs(self, smol):
+        cfg, _, params = smol
+        eng = _engine(cfg, params, batch=2, max_new=4, kv_dtype="int8")
+        outs = eng.serve(_reqs(cfg, [(0, 8, 4), (1, 12, 3)]))
+        assert len(outs[0].tokens) == 4 and len(outs[1].tokens) == 3
+
+    def test_request_too_big_for_pool_raises(self, smol):
+        cfg, _, params = smol
+        eng = Engine(cfg, params, max_len=32, batch_size=2,
+                     serve=ServeConfig(max_new_tokens=8),
+                     paged=PagedConfig(page_size=8, max_slots=2,
+                                       num_pages=3))  # 2 allocatable pages
+        with pytest.raises(ValueError):
+            eng.serve(_reqs(cfg, [(0, 24, 8)]))  # needs 4 pages
