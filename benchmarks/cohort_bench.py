@@ -1,0 +1,151 @@
+"""Cohort-engine benchmarks: paging throughput + a FedProx smoke sweep.
+
+``bench_rows()`` times ``elastic.cohort_swap`` against the population
+store in the two regimes that matter operationally:
+
+  * ``cohort_swap_resident`` — the whole rotation hits the LRU working
+    set (population small or residency generous): pure host memcpy;
+  * ``cohort_swap_paged`` — residency is tighter than the rotation, so
+    every swap spills outgoing pages to npz and reads incoming ones back
+    (the steady state of a 100k-population run).
+
+Derived column: clients/s through the swap path (R clients out + R in
+per call).
+
+``sweep()`` is the cohort-regime convergence smoke (satellite of the
+cohort-engine PR): plain SGD vs the FedProx proximal local objective on
+a population >> R FedSim — cohort sampling is what makes client drift
+real, and this prints the equal-rounds loss gap the drift correction
+buys (or costs) at smoke scale.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _mk_store(population, d, root=None, resident_max=256):
+    import jax
+
+    from repro.runtime.population import PopulationStore
+
+    tmpl = {"ef": jax.ShapeDtypeStruct((d,), np.float32),
+            "mom": jax.ShapeDtypeStruct((d,), np.float32)}
+    return PopulationStore(population, tmpl, root=root,
+                           resident_max=resident_max)
+
+
+def _time_swaps(store, R, d, n_iter, seed=0):
+    from repro.runtime.elastic import cohort_swap
+
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(store.population, R, replace=False)
+    state = {"ef": rng.normal(0, 1, (R, d)).astype(np.float32),
+             "mom": rng.normal(0, 1, (R, d)).astype(np.float32)}
+    # warm: materialize the first cohort so timing measures steady state
+    state = cohort_swap(state, ids,
+                        rng.choice(store.population, R, replace=False),
+                        store)
+    t0 = time.perf_counter()
+    prev = ids
+    for _ in range(n_iter):
+        new = rng.choice(store.population, R, replace=False)
+        state = cohort_swap(state, prev, new, store)
+        prev = new
+    dt = time.perf_counter() - t0
+    us = dt / n_iter * 1e6
+    clients_per_s = 2 * R * n_iter / dt  # R out + R in per swap
+    return us, clients_per_s
+
+
+def bench_rows(smoke: bool = True):
+    """(name, us_per_call, derived) rows for BENCH_kernels.json."""
+    R, d = 64, 25_000  # ~100 KB f32 per client per field
+    pop = 10_000
+    n_iter = 10 if smoke else 50
+    rows = []
+
+    store = _mk_store(pop, d)  # root=None: fully resident
+    us, cps = _time_swaps(store, R, d, n_iter)
+    rows.append(("cohort_swap_resident", us,
+                 f"{cps / 1e3:.1f}k_clients_per_s_R{R}_d{d}"))
+
+    with tempfile.TemporaryDirectory(prefix="cohort_bench_") as td:
+        # residency < 2R: every rotation evicts + pages from disk
+        store = _mk_store(pop, d, root=Path(td), resident_max=R)
+        us, cps = _time_swaps(store, R, d, n_iter)
+        rows.append(("cohort_swap_paged", us,
+                     f"{cps / 1e3:.1f}k_clients_per_s_R{R}_d{d}"))
+    return rows
+
+
+def sweep(rounds: int = 8, population: int = 48, cohort: int = 8):
+    """Cohort-regime smoke: SGD vs FedProx local objective, equal rounds."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl.baselines import make_controller
+    from repro.fl.heterogeneity import HeterogeneityModel
+    from repro.runtime.driver import FedSim, FedSimConfig
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (48, 32)) * 0.1,
+                "b1": jnp.zeros(32),
+                "w2": jax.random.normal(k2, (32, 10)) * 0.1}
+
+    def logits(p, batch):
+        x = batch["images"].reshape(batch["images"].shape[0], -1)
+        return jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"]
+
+    def loss_fn(p, batch):
+        oh = jax.nn.one_hot(batch["labels"], 10)
+        return -jnp.mean(jnp.sum(
+            oh * jax.nn.log_softmax(logits(p, batch)), -1))
+
+    def acc_fn(p, batch):
+        return jnp.mean((jnp.argmax(logits(p, batch), -1)
+                         == batch["labels"]).astype(jnp.float32))
+
+    def shard(cid):
+        # heavily non-IID per-client shards: cohort drift is the point
+        from repro.data.synthetic import client_image_shard
+        xs, ys = client_image_shard("cifar", 64, cid, beta=0.1, seed=0)
+        return xs[:, ::8, ::8], ys  # 4x4x3 -> 48 features
+
+    test = shard(population)  # held-out pseudo-client
+    out = {}
+    for objective in ("sgd", "fedprox"):
+        cfg = FedSimConfig(n_devices=cohort, n_clusters=4, tau=4, q=2,
+                           batch_size=16, seed=0, population=population,
+                           local_objective=objective, prox_mu=0.1)
+        het = HeterogeneityModel(num_devices=cohort, population=population,
+                                 seed=0, model_bits=1e5)
+        sim = FedSim(cfg, init_fn=init_fn, loss_fn=loss_fn, acc_fn=acc_fn,
+                     device_data=None, data_fn=shard, test_data=test,
+                     controller=make_controller("hcef", 4), het=het,
+                     time_budget=1e6, energy_budget=1e7, phi=1000)
+        hist = sim.run(rounds, eval_every=rounds)
+        out[objective] = (hist[-1]["loss"], hist[-1].get("acc", 0.0))
+        print(f"  {objective:8s} loss={hist[-1]['loss']:.4f} "
+              f"acc={hist[-1].get('acc', 0.0):.3f} "
+              f"(population={population} cohort={cohort})")
+    gap = out["sgd"][0] - out["fedprox"][0]
+    print(f"  fedprox equal-rounds loss delta vs sgd: {gap:+.4f}")
+    return out
+
+
+def main(rounds: int = 8):
+    rows = bench_rows(smoke=True)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print("cohort sweep: sgd vs fedprox under cohort sampling")
+    sweep(rounds=rounds)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -42,11 +42,21 @@ def main() -> None:
     for name, us, derived in srows:
         print(f"{name},{us:.1f},{derived}")
     rows = rows + srows
+
+    print("\n== cohort engine: population paging throughput ==")
+    from benchmarks import cohort_bench
+    crows = cohort_bench.bench_rows(smoke=True)
+    for name, us, derived in crows:
+        print(f"{name},{us:.1f},{derived}")
+    rows = rows + crows
     _write_bench_json(rows)
 
     print("\n== overlap: convergence vs staleness ==")
     from benchmarks import overlap_sweep
     overlap_sweep.main(rounds=10)
+
+    print("\n== cohort sweep: sgd vs fedprox under sampling ==")
+    cohort_bench.sweep(rounds=8)
 
     if smoke:
         print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")

@@ -29,6 +29,11 @@ class DeviceReports:
     alpha: np.ndarray  # joules per local iteration
     nu: np.ndarray     # seconds to upload one FULL model
     p: np.ndarray      # transmit power (W)
+    # Population mode: per-CLIENT energy cap (J) for this round — the
+    # client's fair share of the campaign budget given how often it has
+    # participated (``population_energy_caps``).  None -> only the
+    # coupled round-level budget applies (the legacy, fixed-roster path).
+    energy_cap: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -44,6 +49,13 @@ class BudgetState:
     time_spent_this: float = 0.0     # Sum_{e<r} T^{l,e}
     energy_spent_this: float = 0.0
     backhaul_time: float = 0.0       # max_{i'} T_{i,i'}
+    # Population mode: N logical clients rotating through a cohort of R
+    # mesh slots per round.  The ROUND allowances above are unchanged (a
+    # round still runs R devices); these let ``population_energy_caps``
+    # convert the campaign energy budget into a fair per-participation
+    # share.  0/0 -> legacy fixed-roster accounting.
+    population: int = 0
+    cohort: int = 0
 
     def allowances(self):
         """Per-edge-round (time, energy) room implied by (15b)/(15c)."""
@@ -54,6 +66,32 @@ class BudgetState:
         d_energy = ((self.energy_budget - self.energy_spent_prev) / rem_g
                     - self.energy_spent_this) / rem_e
         return max(d_time, 0.0), max(d_energy, 0.0)
+
+
+def population_energy_caps(budget: BudgetState, participations, spent):
+    """Per-client energy caps for the sampled cohort (population mode).
+
+    The campaign buys ``phi * q`` rounds of ``cohort`` participations;
+    each participation's fair energy share is therefore
+    ``energy_budget / (phi * q * cohort)``.  A client beginning its
+    (k+1)-th participation may spend up to ``(k+1) * share`` lifetime
+    joules, so its cap THIS round is that entitlement minus what it
+    already spent — clients that drew cheap rounds earlier bank the
+    difference; none can exceed its fair lifetime share.  This is the
+    population-level analogue of (15c): summing caps over every
+    participation of every client reproduces the campaign budget
+    exactly.
+
+    ``participations``/``spent``: (R,) arrays for the cohort (store
+    accounting, gathered by cohort id).  Returns the (R,) cap array for
+    ``DeviceReports.energy_cap``.
+    """
+    if not (budget.population and budget.cohort):
+        raise ValueError("population_energy_caps needs BudgetState."
+                         "population and .cohort set")
+    share = budget.energy_budget / (budget.phi * budget.q * budget.cohort)
+    entitled = (np.asarray(participations, np.float64) + 1.0) * share
+    return np.maximum(entitled - np.asarray(spent, np.float64), 0.0)
 
 
 def solve_p21_theta(rho, reports: DeviceReports, d_time, d_energy, tau,
@@ -71,6 +109,14 @@ def solve_p21_theta(rho, reports: DeviceReports, d_time, d_energy, tau,
     ``BudgetState`` accounting (and its logs) stay truthful."""
     nu = np.maximum(reports.nu, 1e-12)
     raw_cap = (d_time - rho * tau * reports.mu) / nu
+    if reports.energy_cap is not None:
+        # population mode: a client's personal energy entitlement caps
+        # its theta the same way the round time allowance does —
+        # e_n = rho tau alpha + p theta nu <= energy_cap_n.
+        raw_cap = np.minimum(
+            raw_cap,
+            (reports.energy_cap - rho * tau * reports.alpha)
+            / np.maximum(reports.p * nu, 1e-12))
     infeasible = raw_cap < theta_min - 1e-12
     cap = np.clip(raw_cap, theta_min, 1.0)
     e_comm_room = d_energy - float(np.sum(rho * tau * reports.alpha))
@@ -105,7 +151,14 @@ def solve_p22_rho(theta, reports: DeviceReports, d_time, d_energy, tau,
     s2 = float(np.mean(reports.sigma2))
     G2 = max(float(np.mean(reports.G2)), 1e-12)
     mu = np.maximum(reports.mu, 1e-12)
-    cap = np.clip((d_time - theta * reports.nu) / (tau * mu), rho_min, 1.0)
+    cap = (d_time - theta * reports.nu) / (tau * mu)
+    if reports.energy_cap is not None:
+        # population mode: per-client entitlement also caps local work.
+        cap = np.minimum(
+            cap,
+            (reports.energy_cap - reports.p * theta * reports.nu)
+            / np.maximum(tau * reports.alpha, 1e-12))
+    cap = np.clip(cap, rho_min, 1.0)
     e_comp_room = d_energy - float(np.sum(reports.p * theta * reports.nu))
 
     def rho_of(lam):

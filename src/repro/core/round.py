@@ -39,6 +39,41 @@ class FLState(NamedTuple):
     wire_ef: Any = None
 
 
+# --- FLState split (DESIGN.md §Cohort contract) -------------------------
+# The round state divides into two halves with different ownership:
+#   * MESH-RESIDENT: shared by every logical client — the cluster edge
+#     models (broadcast over the R slots) and the round counter.  They
+#     persist in the mesh across cohorts (edge servers outlive devices).
+#   * PER-CLIENT: each R-slot's slice belongs to the LOGICAL CLIENT the
+#     cohort mapped into that slot this round — error feedback, optimizer
+#     momentum, wire-EF estimates.  Between rounds these slices page
+#     against runtime/population.PopulationStore via elastic.cohort_swap.
+MESH_FIELDS = ("params", "round_idx")
+CLIENT_FIELDS = ("ef", "momentum", "wire_ef")
+
+
+def split_state(state: "FLState"):
+    """FLState -> (mesh_half, client_half) dicts (pure views, no copies)."""
+    mesh = {f: getattr(state, f) for f in MESH_FIELDS}
+    client = {f: getattr(state, f) for f in CLIENT_FIELDS}
+    return mesh, client
+
+
+def merge_state(mesh, client) -> "FLState":
+    """Inverse of split_state: (mesh_half, client_half) -> FLState."""
+    return FLState(**mesh, **client)
+
+
+def client_template(state: "FLState"):
+    """Per-client page template for the paged half: the client_half with
+    each leaf's leading R (cohort-slot) dim stripped — what one logical
+    client's page in the population store holds."""
+    _, client = split_state(state)
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape[1:]), x.dtype),
+        client)
+
+
 class OverlapState(NamedTuple):
     """Double-buffered state for the overlapped round engine (DESIGN.md
     §Overlap contract).

@@ -67,27 +67,87 @@ def dirichlet_partition(labels: np.ndarray, n_devices: int, beta: float,
     return out
 
 
+_TOPIC_CACHE: dict = {}
+
+
+def _shared_topics(vocab: int, seed: int, K: int = 8) -> np.ndarray:
+    """K shared 'topic' unigram models — population-global structure.
+
+    Cached: in cohort mode every client shard re-derives them, and a 100k
+    population must not pay a (K, vocab) Dirichlet per client."""
+    key = (vocab, seed, K)
+    if key not in _TOPIC_CACHE:
+        rng = np.random.default_rng(seed)
+        _TOPIC_CACHE[key] = rng.dirichlet([0.1] * vocab, K)
+    return _TOPIC_CACHE[key]
+
+
+def client_token_shard(vocab: int, n_seq: int, seq_len: int, client_id: int,
+                       beta: float = 1.0, seed: int = 0) -> np.ndarray:
+    """One logical client's non-IID LM shard: (n_seq, seq_len) int32.
+
+    The client's identity IS its seed (SeedSequence([seed, 31337, id])):
+    shard i is the same array whether it is materialized for a 16-device
+    roster or swapped in as cohort member 5 of a 100k population, without
+    generating anyone else's data — the data analogue of the population
+    store's implicit state (DESIGN.md §Cohort contract).  Topic mixture
+    weights ~ Dirichlet(beta) per client over the shared topics; a
+    deterministic +1 bigram makes next-token prediction learnable.
+    """
+    topics = _shared_topics(vocab, seed)
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, 31337, int(client_id)]))
+    mix = rng.dirichlet([beta] * topics.shape[0])
+    probs = mix @ topics
+    draws = rng.choice(vocab, (n_seq, seq_len), p=probs)
+    # bigram structure: every even position predicts (prev + 1) % vocab
+    n_odd = draws[:, 1::2].shape[1]
+    draws[:, 1::2] = (draws[:, 0:2 * n_odd:2] + 1) % vocab
+    return draws.astype(np.int32)
+
+
 def synthetic_tokens(vocab: int, n_seq: int, seq_len: int, n_devices: int,
                      beta: float = 1.0, seed: int = 0) -> np.ndarray:
     """Device-skewed synthetic LM corpus: (n_devices, n_seq, seq_len) int32.
 
-    Each device draws from a mixture of K shared 'topic' unigram models with
-    Dirichlet(beta) device-specific weights; a deterministic +1 bigram makes
-    next-token prediction learnable.
+    Devices d = 0..n_devices-1 get ``client_token_shard`` ids 0..n-1, so a
+    fixed-roster corpus is EXACTLY the first n_devices clients of the
+    infinite logical population — population == R runs see identical data
+    through either path.
     """
-    rng = np.random.default_rng(seed)
-    K = 8
-    topics = rng.dirichlet([0.1] * vocab, K)
-    device_mix = rng.dirichlet([beta] * K, n_devices)
-    out = np.zeros((n_devices, n_seq, seq_len), np.int32)
-    for d in range(n_devices):
-        probs = device_mix[d] @ topics
-        draws = rng.choice(vocab, (n_seq, seq_len), p=probs)
-        # bigram structure: every even position predicts (prev + 1) % vocab
-        n_odd = draws[:, 1::2].shape[1]
-        draws[:, 1::2] = (draws[:, 0:2 * n_odd:2] + 1) % vocab
-        out[d] = draws
-    return out
+    return np.stack([
+        client_token_shard(vocab, n_seq, seq_len, d, beta=beta, seed=seed)
+        for d in range(n_devices)])
+
+
+def client_image_shard(kind: str, n: int, client_id: int, beta: float = 1.0,
+                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """One logical client's non-IID vision shard: (n, H, W, C) + labels.
+
+    Per-client label mix ~ Dirichlet(beta) over the classes (same skew
+    model as ``dirichlet_partition``, but generated per client id instead
+    of partitioned from a finite pool — no global dataset to hold in
+    memory at population scale).  Prototypes stay pinned to ``class_seed``
+    inside ``synthetic_images`` semantics: same class structure everywhere.
+    """
+    if kind == "cifar":
+        hw, ch, ncls = 32, 3, 10
+    elif kind == "femnist":
+        hw, ch, ncls = 28, 1, 62
+    else:
+        raise ValueError(kind)
+    protos = np.random.default_rng(777).normal(
+        0, 1, (ncls, hw, hw, ch)).astype(np.float32)
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, 31337, int(client_id)]))
+    mix = rng.dirichlet([beta] * ncls)
+    labels = rng.choice(ncls, n, p=mix)
+    imgs = protos[labels]
+    sign = rng.choice([-1.0, 1.0], (n, 1, 1, 1)).astype(np.float32)
+    imgs = imgs * sign * rng.uniform(0.7, 1.3, (n, 1, 1, 1)).astype(
+        np.float32)
+    imgs = imgs + 0.6 * rng.normal(0, 1, imgs.shape).astype(np.float32)
+    return imgs, labels.astype(np.int32)
 
 
 def batch_iterator(arrays, batch_size: int, seed: int = 0):

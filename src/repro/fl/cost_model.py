@@ -169,6 +169,23 @@ def decide_stale_clusters(rho, theta, mu, nu, tau, cluster_of, *,
     return tuple(out)
 
 
+def per_device_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
+                      wire_block=1024, dense_bits=16, alive=None):
+    """Per-device energy of one edge round: rho*tau*alpha + p*eff(theta)*nu.
+
+    The single source of truth for the per-device term — ``round_energy``
+    sums it, and the population store's per-client spend accounting
+    (``PopulationStore.record_round``) charges each cohort member its own
+    row so ``population_energy_caps`` can enforce fair lifetime shares.
+    ``alive`` zeroes dropped devices (they never ran)."""
+    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
+                        dense_bits=dense_bits)
+    e = rho * tau * alpha + p * eff * nu
+    if alive is not None:
+        e = e * np.asarray(alive, np.float64)
+    return e
+
+
 def round_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
                  wire_block=1024, dense_bits=16, alive=None):
     """Expected total energy of one edge round (sum over devices).
@@ -177,9 +194,6 @@ def round_energy(rho, theta, mu, nu, alpha, p, tau, *, wire_dtype=None,
     exogenously-unavailable device never ran, and a deadline-dropped
     straggler's partial work is noise next to the budget scale (its
     pending update rides the error feedback, not the wire)."""
-    eff = wire_fraction(theta, wire_dtype=wire_dtype, wire_block=wire_block,
-                        dense_bits=dense_bits)
-    e = rho * tau * alpha + p * eff * nu
-    if alive is not None:
-        e = e * np.asarray(alive, np.float64)
-    return float(np.sum(e))
+    return float(np.sum(per_device_energy(
+        rho, theta, mu, nu, alpha, p, tau, wire_dtype=wire_dtype,
+        wire_block=wire_block, dense_bits=dense_bits, alive=alive)))

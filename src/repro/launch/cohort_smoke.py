@@ -1,0 +1,173 @@
+"""CI cohort smoke: population-scale paging on the smollm train cell.
+
+    PYTHONPATH=src python -m repro.launch.cohort_smoke --population 100000
+
+Exercises the population-scale cohort engine (DESIGN.md §Cohort contract)
+and exits nonzero unless every contract holds:
+
+  * a population >> R run (default 100k logical clients behind an R = 64
+    mesh) completes on CPU with finite losses/params and a working set
+    bounded by ``resident_max`` ~ O(cohort), never O(population);
+  * the population-global error-feedback aggregate is conserved EXACTLY
+    (bit-for-bit in the deterministic f64 sum) across every cohort
+    swap-in/swap-out;
+  * page files exist only for clients that actually participated
+    (implicit-zero state costs no disk either);
+  * population == R with sampling disabled is bit-identical to the
+    legacy fixed-roster path (params, EF, per-round losses).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_model
+from repro.configs.base import FLTopology, HCEFConfig
+from repro.core.round import (client_template, init_state, make_round_step,
+                              merge_state, split_state)
+from repro.fl.heterogeneity import HeterogeneityModel
+from repro.runtime.elastic import cohort_swap
+from repro.runtime.population import PopulationStore
+
+
+def _finite_tree(t) -> bool:
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(t))
+
+
+def _run(cfg, hcef, topo, rounds, *, population=0, cohort_seed=0,
+         store_root=None, resident_max=None, seed=0):
+    """One training cell; population=0 -> legacy fixed roster.
+
+    Returns (state, losses, store, max_resident, ef_conserved)."""
+    R = topo.num_devices
+    state = init_state(cfg, hcef, topo, jax.random.PRNGKey(seed))
+    step = {g: jax.jit(make_round_step(cfg, hcef, topo, gossip=g))
+            for g in (True, False)}
+    het = HeterogeneityModel(num_devices=R, population=population,
+                             seed=seed)
+    store = cohort_ids = None
+    if population:
+        # 2R residency: tight enough that a multi-round run actually
+        # spills pages (the LRU eviction path runs in CI, not just in
+        # unit tests), still O(cohort).
+        store = PopulationStore(population, client_template(state),
+                                root=store_root,
+                                resident_max=resident_max or 2 * R)
+    rng = np.random.default_rng(seed)
+    losses = []
+    max_resident = 0
+    ef_conserved = True
+    for rnd in range(rounds):
+        if store is not None:
+            new_ids = (het.sample_cohort(rnd, R, seed=cohort_seed)
+                       if population > R else np.arange(R, dtype=np.int64))
+            mesh_half, client_half = split_state(state)
+            if cohort_ids is None:
+                client_half = store.gather(new_ids)
+            else:
+                client_np = jax.device_get(client_half)
+                before = store.aggregate("ef", extra_ids=cohort_ids,
+                                         extra={"ef": client_np["ef"]})
+                client_half = cohort_swap(client_np, cohort_ids, new_ids,
+                                          store)
+                after = store.aggregate("ef", extra_ids=new_ids,
+                                        extra={"ef": client_half["ef"]})
+                ef_conserved &= (before == after)
+            state = merge_state(mesh_half,
+                                jax.tree.map(jnp.asarray, client_half))
+            cohort_ids = new_ids
+            max_resident = max(max_resident, store.resident_count)
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (R * hcef.tau * 2, 32)))}
+        keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
+        gossip = (rnd + 1) % hcef.q == 0
+        state, m = step[gossip](state, batch, jnp.ones(R),
+                                jnp.full(R, 0.3), keys)
+        if store is not None:
+            store.record_round(cohort_ids, rnd)
+        loss = float(m["loss"].mean())
+        losses.append(loss)
+        res = (f" res={store.resident_count}/{store.resident_max}"
+               if store is not None else "")
+        print(f"  round {rnd:2d} loss={loss:7.4f}{res}", flush=True)
+    return state, losses, store, max_resident, ef_conserved
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--population", type=int, default=100_000)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--cohort-seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    # tiny smollm cell: per-client pages stay ~100 KB so the 100k-client
+    # gate runs in CI; the paging machinery is size-oblivious.
+    cfg = smoke_model(get_config("smollm_135m").model).replace(
+        d_model=32, d_ff=64)
+    hcef = HCEFConfig(tau=2, q=2, eta=0.1, momentum=0.0)
+    failures = []
+
+    # --- gate 1: population >> R, bounded working set, EF conserved ---
+    topo = FLTopology(clusters=8, devices_per_cluster=8)  # R = 64
+    R = topo.num_devices
+    if args.population <= R:
+        raise SystemExit(f"--population must exceed R={R}")
+    with tempfile.TemporaryDirectory(prefix="cohort_smoke_") as td:
+        print(f"population run: N={args.population:,} R={R}")
+        state, losses, store, max_res, ef_ok = _run(
+            cfg, hcef, topo, args.rounds, population=args.population,
+            cohort_seed=args.cohort_seed, store_root=Path(td),
+            seed=args.seed)
+        if not (_finite_tree(state.params) and _finite_tree(state.ef)
+                and np.all(np.isfinite(losses))):
+            failures.append("NaN/inf in population run")
+        if max_res > store.resident_max:
+            failures.append(f"working set {max_res} exceeded resident_max "
+                            f"{store.resident_max} (O(population) leak?)")
+        if not ef_ok:
+            failures.append("EF aggregate NOT conserved across cohort swap")
+        n_pages = len(list(Path(td).glob("client_*.npz")))
+        touched = len(store.touched)
+        participated = int((store.rounds_participated > 0).sum())
+        print(f"  touched={touched} pages={n_pages} "
+              f"participated={participated} max_resident={max_res}")
+        if touched > args.rounds * R:
+            failures.append(f"{touched} clients materialized state; at "
+                            f"most rounds*R={args.rounds * R} participated")
+        if n_pages > touched:
+            failures.append(f"{n_pages} page files for {touched} touched "
+                            f"clients (implicit zeros should cost no disk)")
+
+    # --- gate 2: population == R bit-identical to the legacy path ---
+    topo_s = FLTopology(clusters=2, devices_per_cluster=2)
+    print("identity run (legacy):")
+    s_ref, l_ref, _, _, _ = _run(cfg, hcef, topo_s, 6, seed=args.seed)
+    print("identity run (population == R, store engaged):")
+    s_pop, l_pop, _, _, _ = _run(cfg, hcef, topo_s, 6, seed=args.seed,
+                                 population=topo_s.num_devices)
+    if l_ref != l_pop:
+        failures.append("population == R losses diverged from legacy")
+    for name, a, b in (("params", s_ref.params, s_pop.params),
+                       ("ef", s_ref.ef, s_pop.ef)):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            if not np.array_equal(np.asarray(x), np.asarray(y)):
+                failures.append(f"population == R {name} not bit-identical")
+                break
+
+    if failures:
+        for f in failures:
+            print(f"COHORT SMOKE FAIL: {f}", file=sys.stderr)
+        return 1
+    print("cohort smoke: all population-engine contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

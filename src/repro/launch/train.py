@@ -23,18 +23,21 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, smoke_model
 from repro.core.compression import cluster_levels_from_theta, quantize_theta
-from repro.core.controller import BudgetState
-from repro.core.round import (init_overlap_state, init_state,
-                              make_overlap_round_step, make_round_step)
-from repro.data.synthetic import synthetic_tokens
+from repro.core.controller import BudgetState, population_energy_caps
+from repro.core.round import (client_template, init_overlap_state,
+                              init_state, make_overlap_round_step,
+                              make_round_step, merge_state, split_state)
+from repro.data.synthetic import client_token_shard, synthetic_tokens
 from repro.dist.policies import make_train_policy
 from repro.fl.baselines import make_controller
 from repro.fl.cost_model import (decide_stale_clusters, overlap_round_time,
-                                 round_energy, round_time)
+                                 per_device_energy, round_energy, round_time)
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.runtime.checkpoint import save_pytree
 from repro.runtime.chaos import ChaosConfig, FaultPlan, controls_on_live
+from repro.runtime.elastic import cohort_swap
+from repro.runtime.population import PopulationStore
 
 
 def main():
@@ -68,6 +71,18 @@ def main():
     ap.add_argument("--stale-quantile", type=float, default=0.9,
                     help="straggler-deadline quantile deciding which "
                          "clusters run stale on gossip rounds")
+    ap.add_argument("--population", type=int, default=0,
+                    help="logical clients behind the R-slot mesh (DESIGN.md "
+                         "§Cohort contract): each round draws a cohort of R "
+                         "from N clients whose per-client state pages "
+                         "through a PopulationStore; 0 disables, "
+                         "population == R pages without sampling (bitwise "
+                         "identical to 0)")
+    ap.add_argument("--cohort-seed", type=int, default=0,
+                    help="seed for the per-round cohort draw")
+    ap.add_argument("--store-root", default="",
+                    help="page directory for the population store (default: "
+                         "a temp dir; small populations stay resident)")
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault injection: device dropout, deadline "
                          "misses, cluster partitions, coordinator churn")
@@ -138,12 +153,34 @@ def main():
     controller = make_controller(args.controller, hcef.tau)
     fl0 = state.fl if hcef.overlap else state
     n_params = sum(int(x.size) for x in jax.tree.leaves(fl0.params)) // R
-    het = HeterogeneityModel(num_devices=R, model_bits=n_params * 16)
+    if args.population and args.population < R:
+        raise SystemExit(f"--population {args.population} smaller than the "
+                         f"mesh cohort R={R}")
+    if args.population > R and hcef.wire_ef:
+        # CHOCO wire-EF estimates are SHARED between gossip neighbors; a
+        # rotating cohort would desync them (the neighbor that holds the
+        # other copy left the mesh).  Paged fine at population == R.
+        raise SystemExit("--wire-ef is incompatible with cohort sampling "
+                         "(--population > R): neighbor estimates desync "
+                         "under churn")
+    het = HeterogeneityModel(num_devices=R, model_bits=n_params * 16,
+                             population=args.population)
     budget = BudgetState(
         time_budget=hcef.time_budget or np.inf,
         energy_budget=hcef.energy_budget or np.inf,
         phi=max(args.rounds // hcef.q, 1), q=hcef.q,
-        backhaul_time=het.backhaul_time())
+        backhaul_time=het.backhaul_time(),
+        population=args.population, cohort=R if args.population else 0)
+    pop_store = None
+    cohort_ids = None
+    if args.population:
+        if args.store_root:
+            store_root = Path(args.store_root)
+        else:
+            import tempfile
+            store_root = Path(tempfile.mkdtemp(prefix="pop_store_"))
+        pop_store = PopulationStore(args.population, client_template(fl0),
+                                    root=store_root, resident_max=4 * R)
 
     plan = None
     if args.chaos:
@@ -153,8 +190,23 @@ def main():
             coordinator_fail_prob=args.chaos_coord_fail),
             num_devices=R, num_clusters=topo.clusters)
 
-    corpus = synthetic_tokens(cfg.vocab_size, n_seq=32,
-                              seq_len=args.seq + 1, n_devices=R, beta=0.5)
+    n_seq = 32
+    if args.population:
+        # per-client shards generated by id (data/synthetic): nothing
+        # O(population) in memory; LRU over recent cohorts.  With
+        # population == R the shards ARE synthetic_tokens' rows, so the
+        # batch stream below is bit-identical to the legacy corpus.
+        from functools import lru_cache
+
+        @lru_cache(maxsize=4 * R)
+        def _shard(cid: int) -> np.ndarray:
+            return client_token_shard(cfg.vocab_size, n_seq=n_seq,
+                                      seq_len=args.seq + 1, client_id=cid,
+                                      beta=0.5)
+    else:
+        corpus = synthetic_tokens(cfg.vocab_size, n_seq=n_seq,
+                                  seq_len=args.seq + 1, n_devices=R,
+                                  beta=0.5)
     rng = np.random.default_rng(0)
     b_per_dev = hcef.tau * 2
 
@@ -164,7 +216,38 @@ def main():
     with ctx:
         for rnd in range(args.rounds):
             t0 = time.time()
-            reports = het.sample_round(rnd)
+            if pop_store is not None:
+                # rotate this round's cohort into the mesh: scatter the
+                # previous cohort's client half (EF, momentum, wire-EF)
+                # back to the store, gather the new cohort's into the same
+                # slots (elastic.cohort_swap — EF aggregate conserved
+                # exactly; at population == R this is an identity
+                # round-trip).
+                new_ids = (het.sample_cohort(rnd, R, seed=args.cohort_seed)
+                           if args.population > R
+                           else np.arange(R, dtype=np.int64))
+                fl = state.fl if hcef.overlap else state
+                mesh_half, client_half = split_state(fl)
+                if cohort_ids is None:
+                    # round 0: mesh slots hold exact zeros — every
+                    # client's implicit initial state; nothing to scatter.
+                    client_half = pop_store.gather(new_ids)
+                else:
+                    client_half = cohort_swap(
+                        jax.device_get(client_half), cohort_ids, new_ids,
+                        pop_store)
+                fl = merge_state(mesh_half,
+                                 jax.tree.map(jnp.asarray, client_half))
+                state = (state._replace(fl=fl) if hcef.overlap else fl)
+                cohort_ids = new_ids
+            reports = het.sample_round(rnd, ids=cohort_ids)
+            if pop_store is not None and args.population > R:
+                import dataclasses as _dc
+                reports = _dc.replace(
+                    reports, energy_cap=population_energy_caps(
+                        budget,
+                        pop_store.rounds_participated[cohort_ids],
+                        pop_store.energy_spent[cohort_ids]))
             if plan is not None:
                 alive0 = plan.sample_available(rnd)
                 rho, theta = controls_on_live(controller, reports, budget,
@@ -183,9 +266,14 @@ def main():
                 if gossip_round and policy is not None:
                     cluster_levels = cluster_levels_from_theta(
                         theta, hcef.theta_levels, cluster_of)
-            idx = rng.integers(0, corpus.shape[1], (R, b_per_dev))
-            batch = {"tokens": jnp.asarray(np.concatenate(
-                [corpus[d, idx[d]] for d in range(R)]))}
+            idx = rng.integers(0, n_seq, (R, b_per_dev))
+            if pop_store is not None:
+                batch = {"tokens": jnp.asarray(np.concatenate(
+                    [_shard(int(cohort_ids[d]))[idx[d]]
+                     for d in range(R)]))}
+            else:
+                batch = {"tokens": jnp.asarray(np.concatenate(
+                    [corpus[d, idx[d]] for d in range(R)]))}
             keys = jax.random.split(jax.random.PRNGKey(1000 + rnd), R)
             # dense_bits=16: het's model_bits above is n_params * 16 (bf16).
             wire_kw = (dict(wire_dtype=hcef.wire_dtype,
@@ -246,6 +334,12 @@ def main():
             e = round_energy(rho, theta, reports.mu, reports.nu,
                              reports.alpha, reports.p, hcef.tau,
                              alive=alive, **wire_kw)
+            if pop_store is not None:
+                pop_store.record_round(
+                    cohort_ids, rnd,
+                    energy=per_device_energy(
+                        rho, theta, reports.mu, reports.nu, reports.alpha,
+                        reports.p, hcef.tau, alive=alive, **wire_kw))
             budget.time_spent_this += t
             budget.energy_spent_this += e
             budget.r += 1
@@ -256,6 +350,10 @@ def main():
                 budget.r = 0
                 budget.l += 1
             chaos_str = ""
+            if pop_store is not None and args.population > R:
+                chaos_str += (f" cohort[{int(cohort_ids.min())}.."
+                              f"{int(cohort_ids.max())}] "
+                              f"res={pop_store.resident_count}")
             if stale_cl is not None:
                 chaos_str += f" stale={len(stale_cl)}/{topo.clusters}"
             if faults is not None:
@@ -269,8 +367,13 @@ def main():
                   f"wall={time.time()-t0:5.1f}s" + chaos_str)
             if args.ckpt_dir:
                 fl = state.fl if hcef.overlap else state
+                meta = {"round": rnd}
+                if pop_store is not None:
+                    meta["cohort_ids"] = [int(c) for c in cohort_ids]
+                    pop_store.save(Path(args.ckpt_dir)
+                                   / f"ckpt_{rnd:06d}.pop.npz")
                 save_pytree(Path(args.ckpt_dir) / f"ckpt_{rnd:06d}.npz",
-                            fl._asdict(), meta={"round": rnd})
+                            fl._asdict(), meta=meta)
 
 
 class _null:

@@ -195,7 +195,9 @@ def controls_on_live(controller, reports, budget, alive):
         mu=np.asarray(reports.mu)[live],
         alpha=np.asarray(reports.alpha)[live],
         nu=np.asarray(reports.nu)[live],
-        p=np.asarray(reports.p)[live])
+        p=np.asarray(reports.p)[live],
+        energy_cap=(None if reports.energy_cap is None
+                    else np.asarray(reports.energy_cap)[live]))
     rho_l, theta_l = controller.controls(sub, budget)
     rho = np.full(alive.size, controller.rho_min, np.float64)
     theta = np.full(alive.size, controller.theta_min, np.float64)

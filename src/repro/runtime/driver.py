@@ -27,15 +27,19 @@ from repro.configs.base import HCEFConfig, validate_theta_levels
 from repro.core.compression import (cluster_levels_from_theta,
                                     compress_delta, quantize_theta)
 from repro.core.controller import BudgetState, DeviceReports
+from repro.core.controller import population_energy_caps
 from repro.core.mixing import check_mixing, make_mixing, participation_mixing
 from repro.dist.collectives import participation_weights
-from repro.fl.baselines import Controller
-from repro.fl.cost_model import per_device_time, round_energy, round_time
+from repro.fl.baselines import Controller, make_local_objective
+from repro.fl.cost_model import (per_device_energy, per_device_time,
+                                 round_energy, round_time)
 from repro.fl.heterogeneity import HeterogeneityModel
 from repro.optim.sgd import sgd_update
 from repro.runtime.chaos import (ChaosConfig, FaultPlan, controls_on_live,
                                  fold_dropped_updates)
 from repro.runtime.checkpoint import load_pytree, save_pytree
+from repro.runtime.elastic import cohort_swap
+from repro.runtime.population import PopulationStore
 
 
 @dataclass
@@ -64,6 +68,17 @@ class FedSimConfig:
     theta_levels: tuple = (0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
     wire_dtype: str = "f32"  # f32 | bf16 | int8 | int4 | fp8
     wire_block: int = 1024
+    # --- population mode (DESIGN.md §Cohort contract) ---
+    # population > 0: n_devices becomes the COHORT size R drawn each round
+    # from `population` logical clients whose per-client state (EF,
+    # momentum) lives in a PopulationStore.  population == n_devices keeps
+    # the full roster resident every round (sampling disabled) and is
+    # bit-identical to population = 0.
+    population: int = 0
+    cohort_seed: int = 0
+    resident_max: int = 256  # store LRU working set, in clients
+    local_objective: str = "sgd"  # 'sgd' | 'fedprox' (fl/baselines)
+    prox_mu: float = 0.01
 
     def __post_init__(self):
         # mirror HCEFConfig's validation so bad wire configs fail at
@@ -72,14 +87,21 @@ class FedSimConfig:
             raise ValueError(f"wire_dtype {self.wire_dtype!r}")
         if self.sparse_gossip:
             validate_theta_levels(self.theta_levels)
+        if self.population and self.population < self.n_devices:
+            raise ValueError(f"population {self.population} smaller than "
+                             f"the cohort size n_devices={self.n_devices}")
+        if self.local_objective not in ("sgd", "fedprox"):
+            raise ValueError(f"local_objective {self.local_objective!r}")
 
 
 class FedSim:
     def __init__(self, cfg: FedSimConfig, *, init_fn, loss_fn, acc_fn,
-                 device_data: List, test_data, controller: Controller,
-                 het: HeterogeneityModel,
+                 device_data: Optional[List], test_data,
+                 controller: Controller, het: HeterogeneityModel,
                  time_budget: float = np.inf, energy_budget: float = np.inf,
-                 phi: int = 10_000, chaos: Optional[ChaosConfig] = None):
+                 phi: int = 10_000, chaos: Optional[ChaosConfig] = None,
+                 data_fn: Optional[Callable] = None,
+                 store_root: Optional[Path] = None):
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -115,11 +137,46 @@ class FedSim:
         self.fault_plan = (FaultPlan(chaos, N, C)
                            if chaos is not None else None)
         self.cluster_staleness = np.zeros(C, np.int64)
+        # --- population mode: cohort of N mesh slots over cfg.population
+        # logical clients; per-client EF/momentum pages through the store.
+        self.data_fn = data_fn
+        self.pop_store: Optional[PopulationStore] = None
+        self.cohort_ids: Optional[np.ndarray] = None
+        if cfg.population:
+            if het.population_size != cfg.population:
+                raise ValueError(
+                    f"HeterogeneityModel population "
+                    f"{het.population_size} != FedSimConfig.population "
+                    f"{cfg.population} (construct the het model with "
+                    f"population=)")
+            if data_fn is None and (device_data is None
+                                    or len(device_data) < cfg.population):
+                raise ValueError("population mode needs data_fn(client_id) "
+                                 "or device_data covering every client")
+            tmpl = {"ef": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(tuple(x.shape[1:]), x.dtype),
+                self.ef)}
+            if self.mom is not None:
+                tmpl["mom"] = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(tuple(x.shape[1:]),
+                                                   x.dtype), self.mom)
+            self.pop_store = PopulationStore(
+                cfg.population, tmpl, root=store_root,
+                resident_max=cfg.resident_max)
+            self.budget.population = cfg.population
+            self.budget.cohort = N
         self._build_jits()
 
     # ------------------------------------------------------------------
     def _build_jits(self):
         cfg = self.cfg
+        # pluggable local objective (fl/baselines): 'sgd' wraps loss_fn
+        # without touching the anchor — identical jaxpr to the pre-cohort
+        # path; 'fedprox' adds the proximal pull toward the round-start
+        # model x0 (client-drift damping for sparsely-participating
+        # cohort members).
+        local_obj = make_local_objective(cfg.local_objective, self.loss_fn,
+                                         prox_mu=cfg.prox_mu)
 
         def device_round(params, mom, batches, key, rho):
             x0 = params
@@ -129,7 +186,7 @@ class FedSim:
             def step(carry, inp):
                 p, m = carry
                 batch, bit = inp
-                loss, g = jax.value_and_grad(self.loss_fn)(p, batch)
+                loss, g = jax.value_and_grad(local_obj)(p, batch, x0)
                 g = jax.tree.map(lambda a: a * bit.astype(a.dtype), g)
                 p, m = sgd_update(p, g, m, lr=cfg.eta, momentum=cfg.momentum)
                 return (p, m), loss
@@ -196,11 +253,22 @@ class FedSim:
         self._avg = jax.jit(lambda p: jax.tree.map(lambda x: x.mean(0), p))
 
     # ------------------------------------------------------------------
-    def _sample_batches(self, tau_plus: int):
-        """(N, tau_plus, bs, ...) batches from each device's local data."""
+    def _client_data(self, cid: int):
+        """(xs, ys) for one logical client — ``data_fn`` (population mode:
+        shards generated per id, nothing global in memory) or the fixed
+        ``device_data`` roster."""
+        if self.data_fn is not None:
+            return self.data_fn(int(cid))
+        return self.device_data[int(cid)]
+
+    def _sample_batches(self, tau_plus: int, client_ids=None):
+        """(N, tau_plus, bs, ...) batches from each mesh slot's local data
+        (slot r = client ``client_ids[r]``; default the fixed roster)."""
         cfg = self.cfg
+        data = (self.device_data if client_ids is None
+                else [self._client_data(c) for c in client_ids])
         xs_all, ys_all = [], []
-        for d, (xs, ys) in enumerate(self.device_data):
+        for d, (xs, ys) in enumerate(data):
             idx = self.rng.integers(0, len(xs),
                                     (tau_plus, cfg.batch_size))
             xs_all.append(xs[idx])
@@ -209,14 +277,51 @@ class FedSim:
                 "labels": jnp.asarray(np.stack(ys_all))}
 
     # ------------------------------------------------------------------
+    def _swap_cohort(self) -> None:
+        """Rotate this round's cohort into the mesh (population mode).
+
+        Scatters the PREVIOUS cohort's post-round EF/momentum back to the
+        store under its client ids and gathers the new cohort's state into
+        the same slots (``elastic.cohort_swap`` — pure per-client moves,
+        population-global EF aggregate conserved exactly).  With
+        population == n_devices the cohort is the identity roster every
+        round and the swap is an exact numpy round-trip, keeping the path
+        bit-identical to population = 0."""
+        cfg, N = self.cfg, self.cfg.n_devices
+        new_ids = (self.het.sample_cohort(self.round, N,
+                                          seed=cfg.cohort_seed)
+                   if cfg.population > N
+                   else np.arange(N, dtype=np.int64))
+        client = {"ef": jax.device_get(self.ef)}
+        if self.mom is not None:
+            client["mom"] = jax.device_get(self.mom)
+        if self.cohort_ids is None:
+            # first round: every mesh slot holds exact zeros — the same
+            # implicit initial state the store reports for every client —
+            # so there is nothing to scatter back yet.
+            client = self.pop_store.gather(new_ids)
+        else:
+            client = cohort_swap(client, self.cohort_ids, new_ids,
+                                 self.pop_store)
+        self.ef = jax.tree.map(jnp.asarray, client["ef"])
+        if self.mom is not None:
+            self.mom = jax.tree.map(jnp.asarray, client["mom"])
+        self.cohort_ids = new_ids
+
+    # ------------------------------------------------------------------
     def run_round(self) -> Dict:
         cfg = self.cfg
         N = cfg.n_devices
         l, r = self.budget.l, self.budget.r
 
+        # --- population mode: rotate this round's cohort into the mesh ---
+        if self.pop_store is not None:
+            self._swap_cohort()
+
         # --- Algorithm 2: device reports ---
-        reports = self.het.sample_round(self.round)
-        batches = self._sample_batches(cfg.tau + 2)
+        reports = self.het.sample_round(self.round, ids=self.cohort_ids)
+        batches = self._sample_batches(cfg.tau + 2,
+                                       client_ids=self.cohort_ids)
         main_b = {k: v[:, :cfg.tau] for k, v in batches.items()}
         if cfg.estimate_stats:
             b1 = {k: v[:, cfg.tau] for k, v in batches.items()}
@@ -224,6 +329,19 @@ class FedSim:
             s2, G2 = self._stats(self.params, b1, b2)
             reports = dataclasses.replace(
                 reports, sigma2=np.asarray(s2), G2=np.asarray(G2))
+        if self.pop_store is not None and cfg.population > N:
+            # population-level budget accounting: each cohort member's
+            # personal energy cap is its fair lifetime share minus what it
+            # already spent (core.controller.population_energy_caps);
+            # P2.1/P2.2 respect it per client.  Disabled at population ==
+            # N (every client participates every round — the coupled
+            # round budget already IS the fair share), keeping that path
+            # bit-identical to population = 0.
+            reports = dataclasses.replace(
+                reports, energy_cap=population_energy_caps(
+                    self.budget,
+                    self.pop_store.rounds_participated[self.cohort_ids],
+                    self.pop_store.energy_spent[self.cohort_ids]))
 
         # --- fault injection: exogenous availability BEFORE the controller
         # (P2.1 is solved over the live subset only — a dead device must
@@ -309,6 +427,18 @@ class FedSim:
         e_round = round_energy(rho, theta, reports.mu, reports.nu,
                                reports.alpha, reports.p, cfg.tau,
                                alive=alive, **wire_kw)
+        if self.pop_store is not None:
+            # per-CLIENT spend rows (population budget bookkeeping feeding
+            # next participation's energy_cap)
+            e_dev = per_device_energy(rho, theta, reports.mu, reports.nu,
+                                      reports.alpha, reports.p, cfg.tau,
+                                      alive=alive, **wire_kw)
+            t_dev_all = per_device_time(rho, theta, reports.mu, reports.nu,
+                                        cfg.tau, **wire_kw)
+            if alive is not None:
+                t_dev_all = t_dev_all * np.asarray(alive, np.float64)
+            self.pop_store.record_round(self.cohort_ids, self.round,
+                                        energy=e_dev, time=t_dev_all)
         b = self.budget
         b.time_spent_this += t_round
         b.energy_spent_this += e_round
@@ -332,6 +462,12 @@ class FedSim:
         }
         if cluster_levels is not None:
             rec["cluster_levels"] = [float(t) for t in cluster_levels]
+        if self.pop_store is not None:
+            parts = self.pop_store.rounds_participated[self.cohort_ids]
+            rec["cohort_new"] = int(np.sum(parts == 1))  # first-timers
+            rec["resident_clients"] = self.pop_store.resident_count
+        if reports.energy_cap is not None:
+            rec["energy_cap_mean"] = float(np.mean(reports.energy_cap))
         if faults is not None:
             rec["participation"] = faults.participation
             rec["n_deadline_missed"] = faults.n_deadline_missed
@@ -394,7 +530,17 @@ class FedSim:
                 "cluster_staleness": self.cluster_staleness.tolist()}
         if self.fault_plan is not None:
             meta["fault_plan"] = self.fault_plan.state_dict()
+        if self.pop_store is not None:
+            # the mesh half above already holds the CURRENT cohort's rows;
+            # the sibling manifest pins everyone else's page versions.
+            meta["cohort_ids"] = (None if self.cohort_ids is None
+                                  else [int(c) for c in self.cohort_ids])
+            self.pop_store.save(self._pop_manifest(path))
         save_pytree(path, state, meta)
+
+    @staticmethod
+    def _pop_manifest(path: Path) -> Path:
+        return Path(path).with_suffix(".pop.npz")
 
     def restore(self, path: Path):
         state = {"params": self.params, "ef": self.ef}
@@ -414,3 +560,8 @@ class FedSim:
                                                 np.int64)
         if self.fault_plan is not None and meta.get("fault_plan"):
             self.fault_plan.load_state_dict(meta["fault_plan"])
+        if self.pop_store is not None:
+            self.pop_store.restore(self._pop_manifest(path))
+            ids = meta.get("cohort_ids")
+            self.cohort_ids = (None if ids is None
+                               else np.asarray(ids, np.int64))

@@ -28,6 +28,34 @@ import numpy as np
 from repro.configs.base import FLTopology
 
 
+def cohort_swap(client_half, out_ids, in_ids, store):
+    """Generalized resize for cohort-sampled FL (DESIGN.md §Cohort
+    contract): instead of folding departing devices' error feedback into
+    the cluster models (``resize_state``'s shrink path — the right move
+    when a device leaves FOREVER), cohort rotation scatters the R mesh
+    slots' per-client state back to the population store under the
+    OUTGOING clients' ids and gathers the INCOMING cohort's state into
+    the same slots.  A departing client's EF residual waits in the store
+    for its next participation; a first-time participant swaps in exact
+    zeros.  Both directions are pure per-client moves, so the
+    population-global EF aggregate is conserved EXACTLY
+    (``PopulationStore.aggregate``; tested in tests/test_population.py).
+
+    ``client_half``: the stacked per-client half of ``FLState``
+    (``core.round.split_state``), leaves (R, *shape), already on host
+    (device_get'd).  Returns the incoming cohort's stacked client_half
+    as numpy arrays (caller device_puts with its shardings).
+    """
+    out_ids = np.asarray(out_ids, np.int64)
+    in_ids = np.asarray(in_ids, np.int64)
+    if out_ids.shape != in_ids.shape:
+        raise ValueError(f"cohort size changed across swap: "
+                         f"{out_ids.shape} -> {in_ids.shape} (resize the "
+                         f"topology via resize_state first)")
+    store.scatter(out_ids, client_half)
+    return store.gather(in_ids)
+
+
 def _cluster_avg(x, C, Dev):
     return x.reshape(C, Dev, *x.shape[1:]).mean(axis=1)
 

@@ -1,0 +1,326 @@
+"""Population store: every logical client's persistent FL state, paged.
+
+The mesh materializes only a COHORT of ``R`` device slots per round
+(DESIGN.md §Cohort contract); this module owns the other side of that
+split — the per-client paged half of ``core.round.FLState`` (error
+feedback, optimizer momentum, wire-EF estimates) for a population of
+``N >> R`` logical clients, plus O(1)-per-client accounting scalars
+(participation counts, cumulative energy/time — the population-level
+budget bookkeeping ``core.controller.population_energy_caps`` reads).
+
+Memory contract: dense (model-sized) client state is held for at most
+``resident_max`` clients in an LRU working set; evicted clients spill to
+one ``.npz`` page each (``runtime/checkpoint.py``'s atomic-write path:
+fsync + rename, torn writes impossible), and clients that have NEVER
+participated occupy no memory at all — their state is implicitly the
+zero tree.  Host memory is therefore O(cohort + resident_max) dense
+state + O(population) scalars, never O(population) dense state.
+
+Pages are VERSIONED (``client_00000042.v000003.npz``): a spill writes
+version v+1 and deletes v only if no checkpoint manifest pins it, so
+``save()`` captures an exact point in time — a store that keeps training
+after a checkpoint does not corrupt it, and ``restore()`` rewinds to the
+pinned versions bit-for-bit.
+
+EF conservation invariant (tested): ``gather``/``scatter`` move client
+state between mesh slots and the store without any arithmetic, so the
+population-global error-feedback aggregate (``aggregate()``, summed per
+client in id order so float association is deterministic) is preserved
+EXACTLY across cohort swap-in/swap-out.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from pathlib import Path
+from typing import Any, Dict, Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.runtime.checkpoint import (CheckpointError, load_pytree,
+                                      save_pytree)
+
+
+def _leaf_np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+class PopulationStore:
+    """Per-client paged state for ``population`` logical clients.
+
+    ``template``: pytree of PER-CLIENT leaves (no leading cohort dim) —
+    anything with ``.shape``/``.dtype`` (np arrays, jax arrays or
+    ``jax.ShapeDtypeStruct``).  ``None`` subtrees (e.g. ``momentum`` when
+    momentum is off) are allowed and simply carry no arrays.
+
+    ``root=None`` keeps everything resident (small populations / tests:
+    no spill, ``resident_max`` ignored).  With a ``root`` directory the
+    LRU holds at most ``resident_max`` clients; the rest live as one
+    atomic npz page per client.
+    """
+
+    def __init__(self, population: int, template: Any, *,
+                 root: Optional[Path] = None, resident_max: int = 256):
+        if population <= 0:
+            raise ValueError(f"population must be positive, got {population}")
+        if root is None and resident_max < population:
+            # no spill target: silently dropping LRU entries would LOSE
+            # client state (EF conservation violated) — refuse up front.
+            resident_max = population
+        if resident_max <= 0:
+            raise ValueError(f"resident_max must be positive, "
+                             f"got {resident_max}")
+        self.population = int(population)
+        self.resident_max = int(resident_max)
+        self.root = Path(root) if root is not None else None
+        if self.root is not None:
+            self.root.mkdir(parents=True, exist_ok=True)
+        # shape/dtype-only template (never holds real data)
+        self.template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(tuple(x.shape),
+                                           np.dtype(x.dtype)), template)
+        self._n_leaves = len(jax.tree.leaves(self.template))
+        # LRU of id -> flat leaf list (np arrays); most-recent last
+        self._resident: OrderedDict[int, list] = OrderedDict()
+        self._dirty: set = set()
+        self._ver: Dict[int, int] = {}     # id -> latest on-disk version
+        self._pinned: Dict[int, int] = {}  # versions the last save() pins
+        # --- O(population) accounting scalars (population-level budget) ---
+        self.rounds_participated = np.zeros(self.population, np.int64)
+        self.last_round = np.full(self.population, -1, np.int64)
+        self.energy_spent = np.zeros(self.population, np.float64)
+        self.time_spent = np.zeros(self.population, np.float64)
+
+    # ------------------------------------------------------------------
+    @property
+    def resident_count(self) -> int:
+        return len(self._resident)
+
+    @property
+    def touched(self) -> set:
+        """Clients with materialized (possibly nonzero) state."""
+        return set(self._resident) | set(self._ver)
+
+    def _check_ids(self, ids) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if ids.ndim != 1:
+            raise ValueError(f"ids must be 1-D, got shape {ids.shape}")
+        if len(np.unique(ids)) != ids.size:
+            raise ValueError("cohort ids must be unique (two mesh slots "
+                             "cannot own the same client's state)")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.population):
+            raise ValueError(f"ids out of range(population="
+                             f"{self.population})")
+        return ids
+
+    # ----------------------------- paging -----------------------------
+    def _page_path(self, cid: int, ver: int) -> Path:
+        return self.root / f"client_{cid:08d}.v{ver:06d}.npz"
+
+    def _zeros(self) -> list:
+        return [np.zeros(l.shape, l.dtype)
+                for l in jax.tree.leaves(self.template)]
+
+    def _load_page(self, cid: int) -> list:
+        tree, _ = load_pytree(self._page_path(cid, self._ver[cid]),
+                              self.template)
+        return [np.asarray(l) for l in jax.tree.leaves(tree)]
+
+    def _spill(self, cid: int, flat: list) -> None:
+        """Atomically write ``cid``'s state as a NEW page version (the old
+        version survives any kill mid-write, and survives outright if a
+        checkpoint manifest pins it)."""
+        old = self._ver.get(cid, 0)
+        new = old + 1
+        tree = jax.tree.unflatten(jax.tree.structure(self.template), flat)
+        save_pytree(self._page_path(cid, new), tree)
+        self._ver[cid] = new
+        if old and old != self._pinned.get(cid):
+            self._page_path(cid, old).unlink(missing_ok=True)
+
+    def _evict_lru(self) -> None:
+        while len(self._resident) > self.resident_max:
+            cid, flat = self._resident.popitem(last=False)
+            if cid in self._dirty:
+                self._spill(cid, flat)
+                self._dirty.discard(cid)
+
+    def flush(self) -> None:
+        """Spill every dirty resident client (state fully on disk after —
+        no-op without a root directory)."""
+        if self.root is None:
+            return
+        for cid in sorted(self._dirty):
+            self._spill(cid, self._resident[cid])
+        self._dirty.clear()
+
+    # ----------------------- gather / scatter --------------------------
+    def _client_flat(self, cid: int, *, lru: bool = True) -> list:
+        if cid in self._resident:
+            if lru:
+                self._resident.move_to_end(cid)
+            return self._resident[cid]
+        if cid in self._ver:
+            return self._load_page(cid)
+        return self._zeros()
+
+    def gather(self, ids: Sequence[int]) -> Any:
+        """Stacked per-client state for a cohort: pytree with leading
+        ``len(ids)`` dim, row r = client ids[r] (resident, paged-in, or
+        implicit zeros for a first-time participant)."""
+        ids = self._check_ids(ids)
+        rows = [self._client_flat(int(cid)) for cid in ids]
+        stacked = [np.stack([row[j] for row in rows])
+                   for j in range(self._n_leaves)]
+        return jax.tree.unflatten(jax.tree.structure(self.template), stacked)
+
+    def scatter(self, ids: Sequence[int], stacked: Any) -> None:
+        """Write a cohort's post-round state back (row r -> client
+        ids[r]).  Pure per-client copies — together with ``gather`` this
+        conserves the population-global aggregate exactly."""
+        ids = self._check_ids(ids)
+        flat = jax.tree.leaves(jax.tree.map(_leaf_np, stacked))
+        if len(flat) != self._n_leaves:
+            raise ValueError(
+                f"scatter tree has {len(flat)} leaves, template has "
+                f"{self._n_leaves} (state split drifted from the store's "
+                f"template)")
+        for j, (leaf, t) in enumerate(zip(flat,
+                                          jax.tree.leaves(self.template))):
+            if leaf.shape != (ids.size,) + t.shape:
+                raise ValueError(f"scatter leaf {j} has shape {leaf.shape}, "
+                                 f"expected {(ids.size,) + t.shape}")
+        for r, cid in enumerate(ids):
+            cid = int(cid)
+            self._resident[cid] = [np.array(leaf[r], dtype=t.dtype)
+                                   for leaf, t in zip(
+                                       flat, jax.tree.leaves(self.template))]
+            self._resident.move_to_end(cid)
+            self._dirty.add(cid)
+        self._evict_lru()
+
+    # --------------------------- accounting ----------------------------
+    def record_round(self, ids: Sequence[int], round_idx: int, *,
+                     energy=None, time=None) -> None:
+        """Population-level budget bookkeeping for one round's cohort."""
+        ids = self._check_ids(ids)
+        self.rounds_participated[ids] += 1
+        self.last_round[ids] = int(round_idx)
+        if energy is not None:
+            self.energy_spent[ids] += np.asarray(energy, np.float64)
+        if time is not None:
+            self.time_spent[ids] += np.asarray(time, np.float64)
+
+    # -------------------------- invariants -----------------------------
+    def aggregate(self, key_prefix: str = "", *, extra_ids=None,
+                  extra: Any = None) -> np.float64:
+        """Deterministic population-global sum of the stored state (leaves
+        whose key path starts with ``key_prefix``, e.g. ``"ef"``), in
+        float64, accumulated in client-id order so the SAME association
+        is used no matter which clients happen to be mesh-resident.
+
+        ``extra_ids``/``extra``: a cohort currently living in mesh slots
+        (stacked pytree) — its rows are summed IN PLACE of the store's
+        copy for those ids, so ``aggregate`` measures the true global
+        state mid-round.  The EF conservation tests pin this value across
+        ``elastic.cohort_swap``."""
+        sel = self._leaf_mask(key_prefix)
+        extra_rows: Dict[int, list] = {}
+        if extra_ids is not None:
+            eids = self._check_ids(extra_ids)
+            eflat = jax.tree.leaves(jax.tree.map(_leaf_np, extra))
+            for r, cid in enumerate(eids):
+                extra_rows[int(cid)] = [leaf[r] for leaf in eflat]
+        total = np.float64(0.0)
+        for cid in sorted(self.touched | set(extra_rows)):
+            flat = extra_rows.get(cid)
+            if flat is None:
+                flat = self._client_flat(cid, lru=False)
+            total += np.float64(sum(
+                float(np.sum(np.asarray(l, np.float64)))
+                for l, m in zip(flat, sel) if m))
+        return total
+
+    def _leaf_mask(self, key_prefix: str) -> list:
+        flat = jax.tree_util.tree_flatten_with_path(self.template)[0]
+        from repro.runtime.checkpoint import _path_str
+        return [_path_str(kp).startswith(key_prefix) for kp, _ in flat]
+
+    # -------------------------- checkpoint -----------------------------
+    def save(self, manifest: Path) -> None:
+        """Point-in-time checkpoint: flush dirty pages, then atomically
+        write a manifest pinning each client's page version plus the
+        accounting arrays.  With ``root=None`` the (small) touched-client
+        state is embedded in the manifest itself."""
+        manifest = Path(manifest)
+        tree: Dict[str, Any] = {"accounting": {
+            "rounds_participated": self.rounds_participated,
+            "last_round": self.last_round,
+            "energy_spent": self.energy_spent,
+            "time_spent": self.time_spent,
+        }}
+        meta: Dict[str, Any] = {"population": self.population,
+                                "embedded": self.root is None}
+        if self.root is None:
+            ids = sorted(self.touched)
+            meta["touched"] = ids
+            tdef = jax.tree.structure(self.template)
+            tree["clients"] = {
+                str(cid): jax.tree.unflatten(
+                    tdef, self._client_flat(cid, lru=False))
+                for cid in ids}
+        else:
+            self.flush()
+            meta["versions"] = {str(cid): v for cid, v in
+                                sorted(self._ver.items())}
+        save_pytree(manifest, tree, meta)
+        if self.root is not None:
+            self._pinned = dict(self._ver)
+
+    def restore(self, manifest: Path) -> None:
+        """Rewind to a manifest: page versions, accounting, working set.
+        Pages written AFTER the manifest was saved are simply unpinned
+        garbage — ``gather`` only ever reads pinned-or-current versions,
+        so a restore mid-run is bit-for-bit the saved state."""
+        manifest = Path(manifest)
+        _, meta = load_pytree(manifest, {})
+        if meta is None or "population" not in meta:
+            raise CheckpointError(f"{manifest}: not a population manifest")
+        if int(meta["population"]) != self.population:
+            raise CheckpointError(
+                f"{manifest}: population {meta['population']} != store's "
+                f"{self.population}")
+        acct = {"rounds_participated": self.rounds_participated,
+                "last_round": self.last_round,
+                "energy_spent": self.energy_spent,
+                "time_spent": self.time_spent}
+        tmpl: Dict[str, Any] = {"accounting": acct}
+        if meta.get("embedded"):
+            tdef = jax.tree.structure(self.template)
+            tmpl["clients"] = {str(cid): self.template
+                               for cid in meta.get("touched", [])}
+        tree, _ = load_pytree(manifest, tmpl)
+        a = tree["accounting"]
+        self.rounds_participated = np.asarray(a["rounds_participated"],
+                                              np.int64)
+        self.last_round = np.asarray(a["last_round"], np.int64)
+        self.energy_spent = np.asarray(a["energy_spent"], np.float64)
+        self.time_spent = np.asarray(a["time_spent"], np.float64)
+        self._resident.clear()
+        self._dirty.clear()
+        if meta.get("embedded"):
+            self._ver = {}
+            for cid in meta.get("touched", []):
+                self._resident[int(cid)] = [
+                    np.asarray(l) for l in
+                    jax.tree.leaves(tree["clients"][str(cid)])]
+        else:
+            self._ver = {int(cid): int(v)
+                         for cid, v in meta.get("versions", {}).items()}
+            self._pinned = dict(self._ver)
+            missing = [cid for cid in self._ver
+                       if not self._page_path(cid, self._ver[cid]).exists()]
+            if missing:
+                raise CheckpointError(
+                    f"{manifest}: pinned pages missing for clients "
+                    f"{missing[:8]} (page dir does not match manifest)")
